@@ -1,0 +1,111 @@
+"""Paper-figure benchmarks (Sec. IV): one function per table/figure.
+
+Validation targets from the paper:
+  Fig. 5  DS collection STDEV far below NO-SDC / NO-SLT / NO-LSA
+          (paper testbed: 308 vs 914 / 1044 / 1433)
+  Fig. 6  DS per-EC training STDEV below ablations; NO-LSA worst skew
+  Fig. 7  DS accuracy above ablations on the traffic task
+  Fig. 8  cost up / backlog down as eps grows; L-DS: lower backlog + more
+          data trained + slightly worse skew than DS at the same eps
+  Fig. 9  DS unit cost below ECFull / ECSelf / CUFull (paper: up to 43.7%
+          reduction vs CUFull); Greedy ~= exact
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ALL_SPECS, CU_FULL, DS, EC_FULL, EC_SELF, GREEDY,
+                        LDS, NO_LSA, NO_SDC, NO_SLT, run)
+from repro.core import metrics as M
+
+from .common import emit, sim_config, testbed_config
+
+SLOTS = 60
+
+
+def fig5_collection_evenness():
+    cfg = testbed_config()
+    vals = {}
+    for spec in [DS, NO_SDC, NO_SLT, NO_LSA]:
+        t0 = time.perf_counter()
+        st, _ = run(cfg, spec, SLOTS)
+        us = (time.perf_counter() - t0) * 1e6 / SLOTS
+        vals[spec.name] = M.stdev_collection(st)
+        emit(f"fig5/stdev_collection/{spec.name}", us, f"{vals[spec.name]:.1f}")
+    ok = all(vals["ds"] < vals[k] for k in ("no-sdc", "no-slt", "no-lsa"))
+    emit("fig5/ds_most_even", 0, str(ok).lower())
+    return vals
+
+
+def fig6_training_evenness():
+    cfg = testbed_config()
+    vals = {}
+    for spec in [DS, NO_SDC, NO_SLT, NO_LSA]:
+        t0 = time.perf_counter()
+        st, _ = run(cfg, spec, SLOTS)
+        us = (time.perf_counter() - t0) * 1e6 / SLOTS
+        stdev = M.stdev_training_per_ec(st)
+        vals[spec.name] = stdev
+        emit(f"fig6/stdev_training/{spec.name}", us,
+             ";".join(f"{v:.0f}" for v in stdev))
+    emit("fig6/ds_mean_below_ablations", 0,
+         str(bool(np.mean(vals["ds"]) <= min(np.mean(vals[k]) for k in
+                                             ("no-sdc", "no-lsa")))).lower())
+    return vals
+
+
+def fig8_ds_vs_lds():
+    out = {}
+    for eps in (0.1, 0.4):
+        for spec in (DS, LDS):
+            cfg = testbed_config(eps=eps)
+            t0 = time.perf_counter()
+            st, _ = run(cfg, spec, SLOTS)
+            us = (time.perf_counter() - t0) * 1e6 / SLOTS
+            s = M.summary(cfg, st)
+            key = f"{spec.name}@eps={eps}"
+            out[key] = s
+            emit(f"fig8/{key}", us,
+                 f"cost={s['avg_cost']:.0f};trained={s['total_trained']:.0f};"
+                 f"Q={s['q_backlog']:.0f};R={s['r_backlog']:.0f};"
+                 f"skew={s['skew_degree']:.4f}")
+    checks = [
+        out["ds@eps=0.4"]["q_backlog"] < out["ds@eps=0.1"]["q_backlog"],  # O(1/eps)
+        out["l-ds@eps=0.1"]["q_backlog"] < out["ds@eps=0.1"]["q_backlog"],
+        out["l-ds@eps=0.1"]["total_trained"] > out["ds@eps=0.1"]["total_trained"],
+    ]
+    emit("fig8/theory_checks", 0, f"{sum(checks)}/3")
+    return out
+
+
+def fig9_unit_cost():
+    rows = {}
+    specs = [DS, EC_FULL, EC_SELF, CU_FULL]
+    for n_ec in (3, 5, 8):
+        cfg = sim_config(n_cu=20, n_ec=n_ec)
+        for spec in specs:
+            t0 = time.perf_counter()
+            st, _ = run(cfg, spec, SLOTS)
+            us = (time.perf_counter() - t0) * 1e6 / SLOTS
+            uc = M.unit_cost(st)
+            rows[(n_ec, spec.name)] = uc
+            emit(f"fig9/unit_cost/ec{n_ec}/{spec.name}", us, f"{uc:.2f}")
+    for n_cu in (10, 40):
+        cfg = sim_config(n_cu=n_cu, n_ec=5)
+        for spec in specs:
+            t0 = time.perf_counter()
+            st, _ = run(cfg, spec, SLOTS)
+            us = (time.perf_counter() - t0) * 1e6 / SLOTS
+            uc = M.unit_cost(st)
+            rows[(f"cu{n_cu}", spec.name)] = uc
+            emit(f"fig9/unit_cost/cu{n_cu}/{spec.name}", us, f"{uc:.2f}")
+    # headline: max reduction vs CUFull across sweeps
+    reds = []
+    for key in set(k[0] for k in rows):
+        ds = rows[(key, "ds")]
+        cf = rows[(key, "cufull")]
+        reds.append(100 * (cf - ds) / cf)
+    emit("fig9/max_cost_reduction_vs_cufull_pct", 0, f"{max(reds):.1f}")
+    return rows

@@ -1,0 +1,74 @@
+"""Roofline table: aggregates the dry-run JSON artifacts into the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
+bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config
+
+from .common import emit
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def model_flops(arch: str, shape: str, n_chips: int) -> float:
+    """Useful FLOPs per device per step: 6*N*D for training (N = active
+    params, D = tokens), 2*N per token for inference."""
+    cfg = get_config(arch)
+    seq, gb, kind = SHAPES[shape]
+    n = cfg.n_active_params()
+    if kind == "train":
+        return 6.0 * n * seq * gb / n_chips
+    if kind == "prefill":
+        return 2.0 * n * seq * gb / n_chips
+    return 2.0 * n * gb / n_chips  # decode: one token per sequence
+
+
+OPTIMIZED_DIR = pathlib.Path("experiments/optimized")
+
+
+def _emit_dir(directory: pathlib.Path, prefix: str, emit_rows: bool):
+    rows = []
+    for f in sorted(directory.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("skipped") or "error" in d:
+            continue
+        rf = d["roofline"]
+        mf = model_flops(d["arch"], d["shape"], d["n_chips"])
+        useful_ratio = mf / max(d["cost"]["flops_per_device"], 1.0)
+        bound = rf["bottleneck"]
+        step_s = rf["step_s_lower_bound"]
+        frac = mf / 197e12 / max(step_s, 1e-12)  # useful-compute roofline frac
+        row = dict(arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                   style=d.get("style", "tp"),
+                   compute_s=rf["compute_s"], memory_s=rf["memory_s"],
+                   collective_s=rf["collective_s"], bottleneck=bound,
+                   useful_flops_ratio=useful_ratio, roofline_fraction=frac,
+                   peak_gib=d["memory"]["peak_bytes"] / 2 ** 30,
+                   fits_hbm=d.get("analytic_memory", {}).get("fits_hbm"))
+        rows.append(row)
+        if emit_rows:
+            emit(f"{prefix}/{d['arch']}/{d['shape']}/{d['mesh']}", 0,
+                 f"c={rf['compute_s']*1e3:.1f}ms;m={rf['memory_s']*1e3:.1f}ms;"
+                 f"x={rf['collective_s']*1e3:.1f}ms;{bound};"
+                 f"mfu_frac={frac:.3f};useful={useful_ratio:.2f};"
+                 f"fits={row['fits_hbm']}")
+    if emit_rows and rows:
+        n_bound = {}
+        for r in rows:
+            n_bound[r["bottleneck"]] = n_bound.get(r["bottleneck"], 0) + 1
+        emit(f"{prefix}/cells", 0, str(len(rows)))
+        emit(f"{prefix}/bottleneck_histogram", 0,
+             ";".join(f"{k}={v}" for k, v in sorted(n_bound.items())))
+        emit(f"{prefix}/median_mfu_frac", 0,
+             f"{sorted(r['roofline_fraction'] for r in rows)[len(rows)//2]:.3f}")
+    return rows
+
+
+def roofline_table(emit_rows: bool = True):
+    rows = _emit_dir(DRYRUN_DIR, "roofline", emit_rows)
+    if OPTIMIZED_DIR.exists():
+        rows += _emit_dir(OPTIMIZED_DIR, "roofline_optimized", emit_rows)
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  fig5/fig6   skew-aware mechanism ablations (collection / training evenness)
+  fig7        trained-model accuracy under scheduling ablations
+  fig8        DS vs Learning-aid DS across step sizes (cost/backlog/skew)
+  fig9        unit framework cost vs baselines across N / M (headline: cost
+              reduction vs CUFull)
+  sched_scale scheduler wall-time scaling + matching kernel
+  roofline    aggregated dry-run roofline terms (run scripts/dryrun_sweep.sh
+              first; missing artifacts are skipped gracefully)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import fig7_accuracy, paper_figs, roofline, sched_scale
+
+    sections = [
+        ("fig5", paper_figs.fig5_collection_evenness),
+        ("fig6", paper_figs.fig6_training_evenness),
+        ("fig7", fig7_accuracy.fig7_accuracy),
+        ("fig8", paper_figs.fig8_ds_vs_lds),
+        ("fig9", paper_figs.fig9_unit_cost),
+        ("sched_scale", sched_scale.sched_scale),
+        ("matching", sched_scale.matching_kernel_bench),
+        ("roofline", roofline.roofline_table),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"summary/sections_failed,0,{failures}")
+
+
+if __name__ == "__main__":
+    main()

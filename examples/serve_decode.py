@@ -1,0 +1,26 @@
+"""Batched decode serving example: KV-cache generation on a reduced config
+of any assigned architecture (ring-buffer caches for SWA archs, recurrent
+state for SSM archs).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+                "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

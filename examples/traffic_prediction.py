@@ -1,0 +1,27 @@
+"""The paper's own testbed scenario end-to-end (Sec. IV-A/B): cooperative
+traffic-prediction training across 3 edge clouds fed by 6 CUs, scheduled by
+DataSche; compares final model accuracy (within-15% criterion) under DS and
+the NO-LSA ablation.
+
+    PYTHONPATH=src python examples/traffic_prediction.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import fig7_accuracy
+
+
+def main():
+    print("training traffic predictors under 4 scheduling policies "
+          "(paper Fig. 7 reproduction)...")
+    print("name,us_per_call,derived")
+    results = fig7_accuracy.fig7_accuracy()
+    print()
+    for name, accs in results.items():
+        print(f"{name:8s} accuracy over slots: "
+              + " -> ".join(f"{a:.1%}" for a in accs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver: train an LM under Cocktail-scheduled non-IID data.
+
+Default config is CPU-sized (~20M params, 120 steps) so the example runs in
+minutes; the ~100M-parameter run the deliverable describes is the same
+command with bigger flags (a few hours on CPU, minutes on one TPU host):
+
+    PYTHONPATH=src python examples/train_lm_cocktail.py \
+        --d-model 640 --layers 10 --vocab 50048 --steps 300 --batch 16
+
+The driver demonstrates: scheduler-driven batch composition + |D_j| sample
+weighting (paper eq. 15), heterogeneous-EC straggler handling, checkpoint /
+auto-resume (kill it mid-run and re-run the same command).
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=320)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default="/tmp/cocktail_lm_ckpt")
+    args = ap.parse_args()
+
+    # register a custom-size dense config (minitron family, scaled)
+    import repro.configs.base as base
+    cfg = dataclasses.replace(
+        get_config("minitron-4b"),
+        name="lm-example",
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 2), n_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64, d_ff=args.d_model * 3, vocab_size=args.vocab,
+        head_pad_multiple=1, remat=False,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    base.register(cfg)
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+
+    summary = train_mod.main([
+        "--arch", "lm-example", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--checkpoint-dir", args.checkpoint_dir,
+        "--scheduler", "ds",
+    ])
+    assert summary["last_loss"] < summary["first_loss"], "loss must decrease"
+    print(f"loss {summary['first_loss']:.3f} -> {summary['last_loss']:.3f} OK")
+
+
+if __name__ == "__main__":
+    main()

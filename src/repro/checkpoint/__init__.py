@@ -1,0 +1,7 @@
+"""Fault-tolerant checkpointing: atomic npz snapshots, auto-resume,
+elastic resharding across mesh shapes."""
+from .checkpoint import (CheckpointManager, latest_step, restore, save,
+                         restore_sharded)
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save",
+           "restore_sharded"]

@@ -1,0 +1,139 @@
+"""Checkpointing substrate.
+
+Design (node-failure tolerant):
+  * one ``step_<N>.npz`` per snapshot, written to a tmp file then atomically
+    renamed — a crash mid-write never corrupts the latest checkpoint;
+  * ``latest_step``/auto-resume: the training driver restarts from the
+    newest complete snapshot after any failure (see launch/train.py);
+  * **elastic resharding**: arrays are stored as full host arrays keyed by
+    pytree path; ``restore_sharded`` device_puts them under ANY mesh/sharding
+    — restarting on a different topology (scale up/down after node loss)
+    needs no conversion step;
+  * a retention window bounds disk usage.
+
+At real multi-pod scale the npz container would be replaced by a parallel
+object store writer per host shard; the atomic-rename + manifest protocol
+and the resharding path are the load-bearing parts and are what tests cover.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                             f"template {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(path: str | pathlib.Path, step: int, tree: Any,
+         extra: Optional[dict] = None) -> pathlib.Path:
+    """Atomic snapshot: write tmp in same dir, fsync, rename."""
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    if extra:
+        flat["__meta__"] = np.frombuffer(
+            json.dumps(extra).encode(), dtype=np.uint8).copy()
+    final = path / f"step_{step:010d}.npz"
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return final
+
+
+def latest_step(path: str | pathlib.Path) -> Optional[int]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    steps = [int(m.group(1)) for f in path.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f.name))]
+    return max(steps) if steps else None
+
+
+def restore(path: str | pathlib.Path, step: int, template: Any):
+    """Load a snapshot as host numpy arrays shaped like `template`."""
+    with np.load(pathlib.Path(path) / f"step_{step:010d}.npz") as z:
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+        meta = None
+        if "__meta__" in z.files:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+    return _unflatten(template, flat), meta
+
+
+def restore_sharded(path, step, template, shardings):
+    """Elastic restore: place each leaf under `shardings` (any mesh shape —
+    the snapshot stores full arrays, so scaling the cluster up or down
+    between runs is transparent)."""
+    host_tree, meta = restore(path, step, template)
+    placed = jax.tree.map(lambda a, s: jax.device_put(a, s), host_tree, shardings)
+    return placed, meta
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """save-every-N + retention + auto-resume convenience wrapper."""
+
+    directory: str
+    every_steps: int = 50
+    keep: int = 3
+
+    def maybe_save(self, step: int, tree: Any, extra: Optional[dict] = None) -> bool:
+        if step % self.every_steps:
+            return False
+        save(self.directory, step, tree, extra)
+        self._gc()
+        return True
+
+    def _gc(self):
+        path = pathlib.Path(self.directory)
+        snaps = sorted(f for f in path.iterdir()
+                       if re.fullmatch(r"step_\d+\.npz", f.name))
+        for f in snaps[:-self.keep]:
+            f.unlink()
+
+    def resume(self, template: Any, shardings=None):
+        """Returns (tree, meta, step) from the newest snapshot, or None."""
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        if shardings is not None:
+            tree, meta = restore_sharded(self.directory, step, template, shardings)
+        else:
+            tree, meta = restore(self.directory, step, template)
+        return tree, meta, step

@@ -1,0 +1,6 @@
+"""Architecture configs (assigned pool + the paper's own testbed)."""
+from .base import (ARCH_IDS, LONG_CONTEXT_OK, SHAPES, ArchConfig, all_configs,
+                   get_config, reduced, register)
+
+__all__ = ["ARCH_IDS", "ArchConfig", "LONG_CONTEXT_OK", "SHAPES",
+           "all_configs", "get_config", "reduced", "register"]

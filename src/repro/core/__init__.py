@@ -1,0 +1,25 @@
+"""Cocktail core: cost-efficient, data-skew-aware online data scheduling.
+
+Public API:
+  CocktailConfig, NetworkState, QueueState, Multipliers, Decision,
+  SchedulerState, init_state           -- state types
+  sample_network_state, framework_cost -- stochastic environment (Sec. II)
+  step, run, AlgoSpec and the named specs (DS, LDS, NO_SDC, ...) -- Sec. III
+  metrics                              -- Sec. IV evaluation metrics
+"""
+from .datasche import (ALL_SPECS, CU_FULL, DS, DS_EXACT, EC_FULL, EC_SELF,
+                       GREEDY, LDS, NO_LSA, NO_SDC, NO_SLT, AlgoSpec,
+                       SlotRecord, collection_weights, run, skew_degree, step,
+                       training_weights)
+from .network import framework_cost, sample_network_state
+from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
+                    QueueState, SchedulerState, init_state)
+
+__all__ = [
+    "ALL_SPECS", "AlgoSpec", "CocktailConfig", "CU_FULL", "DS", "DS_EXACT",
+    "Decision", "EC_FULL", "EC_SELF", "GREEDY", "LDS", "Multipliers",
+    "NetworkState", "NO_LSA", "NO_SDC", "NO_SLT", "QueueState",
+    "SchedulerState", "SlotRecord", "collection_weights", "framework_cost",
+    "init_state", "run", "sample_network_state", "skew_degree", "step",
+    "training_weights",
+]

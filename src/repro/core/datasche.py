@@ -1,0 +1,360 @@
+"""DataSche and Learning-aid DataSche online scheduling algorithms (Sec. III).
+
+The per-slot pipeline is
+
+  1. observe network state S(t) (or sample the stochastic generator),
+  2. solve the collection subproblem  -> alpha, theta      (P1' / P1 / full)
+  3. solve the training subproblem    -> x, y, z           (P2' / linear / ...)
+  4. execute: update queues Q, R, cumulative Omega, framework cost,
+  5. SGD-update the Lagrange multipliers (step eps); L-DS additionally keeps
+     empirical multipliers Theta' updated from *virtual* plain-P1/P2 decisions
+     with a diminishing step and schedules with Theta~ = Theta + Theta' - pi.
+
+Policies are selected by an ``AlgoSpec`` so every paper baseline (NO-SDC,
+NO-SLT, NO-LSA, Greedy, ECFull, ECSelf, CUFull) is a one-line variant.
+``exact=False`` (production) is fully jittable and driven by ``lax.scan``;
+``exact=True`` swaps the greedy matchers for the networkx Thm.-1/Thm.-2
+oracles and runs a host loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import matching, training_alloc
+from .network import framework_cost, sample_network_state
+from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
+                    QueueState, SchedulerState, init_state)
+
+_TINY = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """Which variant of the scheduler to run (paper Sec. IV benchmarks)."""
+
+    name: str = "ds"
+    collection: str = "skew"  # skew | plain | cufull
+    training: str = "skew"  # skew | linear | solo | ecfull
+    use_lsa: bool = True  # long-term skew amendment (phi/lam multipliers)
+    learning_aid: bool = False
+    exact: bool = False  # exact Thm.1/Thm.2 matching oracles (host-side)
+
+
+DS = AlgoSpec(name="ds")
+DS_EXACT = AlgoSpec(name="ds-exact", exact=True)
+LDS = AlgoSpec(name="l-ds", learning_aid=True)
+NO_SDC = AlgoSpec(name="no-sdc", collection="plain")
+NO_SLT = AlgoSpec(name="no-slt", training="linear")
+NO_LSA = AlgoSpec(name="no-lsa", use_lsa=False)
+GREEDY = AlgoSpec(name="greedy")  # greedy matchers == production path
+EC_FULL = AlgoSpec(name="ecfull", training="ecfull")
+EC_SELF = AlgoSpec(name="ecself", training="solo")
+CU_FULL = AlgoSpec(name="cufull", collection="cufull")
+
+ALL_SPECS = {s.name: s for s in
+             [DS, DS_EXACT, LDS, NO_SDC, NO_SLT, NO_LSA, GREEDY, EC_FULL, EC_SELF, CU_FULL]}
+
+
+# --------------------------------------------------------------------------
+# Weights (the per-slot dual prices entering P1'/P2')
+# --------------------------------------------------------------------------
+
+def collection_weights(net: NetworkState, mults: Multipliers) -> jax.Array:
+    """w_ij = d_ij (mu_i - eta_ij - c_ij); the P1' utility rate."""
+    return net.d * (mults.mu[:, None] - mults.eta - net.c)
+
+
+def training_weights(cfg: CocktailConfig, net: NetworkState, mults: Multipliers,
+                     use_lsa: bool) -> tuple[jax.Array, jax.Array]:
+    """Returns (beta (N,M), gamma (N,M,M)).
+
+    beta[i,j]    weight of x[i,j]   (eq. 18 x-coefficient)
+    gamma[i,j,k] weight of y[i,j,k] (from queue R[i,j], trained at EC k)
+                 = beta[i,k] + eta[i,j] - eta[i,k] - e[j,k]
+    """
+    phi = mults.phi if use_lsa else jnp.zeros_like(mults.phi)
+    lam = mults.lam if use_lsa else jnp.zeros_like(mults.lam)
+    d_hi = jnp.asarray(cfg.delta_hi, jnp.float32)
+    d_lo = jnp.asarray(cfg.delta_lo, jnp.float32)
+    common = jnp.sum(lam * d_hi[:, None] - phi * d_lo[:, None], axis=0)  # (M,)
+    beta = -net.p[None, :] + mults.eta - lam + phi + common[None, :]
+    gamma = (beta[:, None, :] + mults.eta[:, :, None]
+             - mults.eta[:, None, :] - net.e[None, :, :])
+    return beta, gamma
+
+
+# --------------------------------------------------------------------------
+# Collection policies
+# --------------------------------------------------------------------------
+
+def _collect_skew(cfg, net, mults, queues, exact):
+    w = collection_weights(net, mults)
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, _TINY)), -jnp.inf)
+    if exact:
+        from . import oracle
+        alpha, theta = oracle.exact_collection(np.asarray(logw))
+        return jnp.asarray(alpha), jnp.asarray(theta)
+    return matching.greedy_collection(logw)
+
+
+def _collect_plain(cfg, net, mults, queues, exact):
+    w = collection_weights(net, mults)
+    alpha = matching.greedy_assignment(w)
+    return alpha, alpha  # theta = 1 on the selected connection
+
+
+def _collect_cufull(cfg, net, mults, queues, exact):
+    n = cfg.n_cu
+    alpha = jnp.ones((cfg.n_cu, cfg.n_ec), jnp.float32)
+    theta = jnp.full((cfg.n_cu, cfg.n_ec), 1.0 / n, jnp.float32)
+    return alpha, theta
+
+
+_COLLECTORS = {"skew": _collect_skew, "plain": _collect_plain, "cufull": _collect_cufull}
+
+
+# --------------------------------------------------------------------------
+# Training policies
+# --------------------------------------------------------------------------
+
+def _pair_index(m: int) -> tuple[np.ndarray, np.ndarray]:
+    pj, pk = np.triu_indices(m, k=1)
+    return pj.astype(np.int32), pk.astype(np.int32)
+
+
+def _compose_from_match(match, x_solo, pairs, pa, m):
+    """Assemble (x, y, z) from the matching and the pre-solved allocations."""
+    pj, pk = pairs
+    onehot_j = jax.nn.one_hot(pj, m, dtype=x_solo.dtype)  # (P, M)
+    onehot_k = jax.nn.one_hot(pk, m, dtype=x_solo.dtype)
+    sel = match[pj, pk]  # (P,) 1 if pair matched
+    diag = jnp.diagonal(match)  # (M,)
+
+    x = x_solo * diag[None, :]
+    x = x + jnp.einsum("pn,pm->nm", pa.x_j * sel[:, None], onehot_j)
+    x = x + jnp.einsum("pn,pm->nm", pa.x_k * sel[:, None], onehot_k)
+    y = jnp.einsum("pn,pm,pl->nml", pa.y_jk * sel[:, None], onehot_j, onehot_k)
+    y = y + jnp.einsum("pn,pm,pl->nml", pa.y_kj * sel[:, None], onehot_k, onehot_j)
+    z = match * (1.0 - jnp.eye(m, dtype=match.dtype))
+    return x, y, z
+
+
+def _train_generic(cfg, net, mults, queues, exact, use_lsa, solo_fn, pair_fn):
+    beta, gamma = training_weights(cfg, net, mults, use_lsa)
+    budgets = net.f / cfg.rho
+    m = cfg.n_ec
+
+    x_solo, val_solo = jax.vmap(solo_fn, in_axes=(1, 1, 0), out_axes=(1, 0))(
+        beta, queues.r, budgets)
+
+    pj, pk = _pair_index(m)
+    pj_a, pk_a = jnp.asarray(pj), jnp.asarray(pk)
+
+    def one_pair(j, k):
+        return pair_fn(
+            beta[:, j], gamma[:, k, j], beta[:, k], gamma[:, j, k],
+            queues.r[:, j], queues.r[:, k], budgets[j], budgets[k],
+            net.cap_d[j, k])
+
+    pa = jax.vmap(one_pair)(pj_a, pk_a)
+    pair_vals = jnp.zeros((m, m), jnp.float32).at[pj_a, pk_a].set(pa.value)
+    pair_vals = pair_vals + pair_vals.T
+
+    if exact:
+        from . import oracle
+        match = jnp.asarray(oracle.exact_pairing(np.asarray(val_solo), np.asarray(pair_vals)))
+    else:
+        match = matching.greedy_pairing(val_solo, pair_vals)
+
+    x, y, z = _compose_from_match(match, x_solo, (pj_a, pk_a), pa, m)
+    return x, y, z
+
+
+def _train_skew(cfg, net, mults, queues, exact, use_lsa):
+    pair_fn = functools.partial(training_alloc.pair_allocate, iters=cfg.pair_iters)
+    return _train_generic(cfg, net, mults, queues, exact, use_lsa,
+                          training_alloc.solo_waterfill, pair_fn)
+
+
+def _train_linear(cfg, net, mults, queues, exact, use_lsa):
+    return _train_generic(cfg, net, mults, queues, exact, use_lsa,
+                          training_alloc.linear_solo, training_alloc.linear_pair)
+
+
+def _train_solo(cfg, net, mults, queues, exact, use_lsa):
+    beta, _ = training_weights(cfg, net, mults, use_lsa)
+    budgets = net.f / cfg.rho
+    x, _ = jax.vmap(training_alloc.solo_waterfill, in_axes=(1, 1, 0), out_axes=(1, 0))(
+        beta, queues.r, budgets)
+    m = cfg.n_ec
+    return x, jnp.zeros((cfg.n_cu, m, m), jnp.float32), jnp.zeros((m, m), jnp.float32)
+
+
+def _train_ecfull(cfg, net, mults, queues, exact, use_lsa):
+    beta, gamma = training_weights(cfg, net, mults, use_lsa)
+    budgets = net.f / cfg.rho
+    x, y, _ = training_alloc.full_allocate(beta, gamma, queues.r, budgets, net.cap_d)
+    m = cfg.n_ec
+    return x, y, jnp.ones((m, m), jnp.float32) - jnp.eye(m, dtype=jnp.float32)
+
+
+_TRAINERS = {"skew": _train_skew, "linear": _train_linear,
+             "solo": _train_solo, "ecfull": _train_ecfull}
+
+
+# --------------------------------------------------------------------------
+# Dynamics (queues + multiplier SGD)
+# --------------------------------------------------------------------------
+
+def _served(dec_alpha, dec_theta, net, queues):
+    """Samples actually moved CU->EC: alpha*theta*d, capped by Q backlog."""
+    req = dec_alpha * dec_theta * net.d
+    tot = jnp.sum(req, axis=1)
+    scale = jnp.minimum(1.0, queues.q / jnp.maximum(tot, _TINY))
+    return req * scale[:, None]
+
+
+def update_multipliers(cfg: CocktailConfig, mults: Multipliers, net: NetworkState,
+                       served: jax.Array, x: jax.Array, y: jax.Array,
+                       use_lsa: bool, step: jax.Array | float) -> Multipliers:
+    dep_r = x + jnp.sum(y, axis=2)  # leaves queue R[i,j]
+    trained_at = x + jnp.sum(y, axis=1)  # trained at EC k
+    tot_j = jnp.sum(trained_at, axis=0)
+    d_hi = jnp.asarray(cfg.delta_hi, jnp.float32)
+    d_lo = jnp.asarray(cfg.delta_lo, jnp.float32)
+
+    mu = jnp.maximum(mults.mu + step * (net.arrivals - jnp.sum(served, axis=1)), 0.0)
+    eta = jnp.maximum(mults.eta + step * (served - dep_r), 0.0)
+    if use_lsa:
+        phi = jnp.maximum(mults.phi + step * (d_lo[:, None] * tot_j[None, :] - trained_at), 0.0)
+        lam = jnp.maximum(mults.lam + step * (trained_at - d_hi[:, None] * tot_j[None, :]), 0.0)
+    else:
+        phi, lam = mults.phi, mults.lam
+    return Multipliers(mu=mu, eta=eta, phi=phi, lam=lam)
+
+
+def apply_decision(cfg: CocktailConfig, queues: QueueState, net: NetworkState,
+                   served: jax.Array, x: jax.Array, y: jax.Array) -> QueueState:
+    dep_r = x + jnp.sum(y, axis=2)
+    trained_at = x + jnp.sum(y, axis=1)
+    q = jnp.maximum(queues.q - jnp.sum(served, axis=1), 0.0) + net.arrivals
+    r = jnp.maximum(queues.r - dep_r, 0.0) + served
+    return QueueState(q=q, r=r, omega=queues.omega + trained_at)
+
+
+# --------------------------------------------------------------------------
+# One slot
+# --------------------------------------------------------------------------
+
+class SlotRecord(NamedTuple):
+    cost: jax.Array
+    trained: jax.Array
+    q_backlog: jax.Array
+    r_backlog: jax.Array
+    skew: jax.Array
+
+
+def skew_degree(cfg: CocktailConfig, omega: jax.Array) -> jax.Array:
+    """max_{i,j} | Omega_ij / sum_l Omega_lj - zeta_i / sum zeta | (eq. 9 LHS)."""
+    props = jnp.asarray(cfg.proportions, jnp.float32)
+    tot = jnp.sum(omega, axis=0, keepdims=True)
+    frac = omega / jnp.maximum(tot, _TINY)
+    dev = jnp.abs(frac - props[:, None])
+    return jnp.max(jnp.where(tot > _TINY, dev, 0.0))
+
+
+def _pi(cfg: CocktailConfig) -> float:
+    """L-DS distance parameter pi = sqrt(eps) * log^2(eps) ([24],[25])."""
+    return float(np.sqrt(cfg.eps) * np.log(cfg.eps) ** 2)
+
+
+def _tree_affine(a: Multipliers, b: Multipliers, shift: float) -> Multipliers:
+    return jax.tree.map(lambda x, y: x + y - shift, a, b)
+
+
+def step(cfg: CocktailConfig, spec: AlgoSpec, state: SchedulerState,
+         net: Optional[NetworkState] = None) -> tuple[SchedulerState, SlotRecord, Decision]:
+    """Run one slot. Jittable when spec.exact is False (cfg/spec static)."""
+    rng, k_net = jax.random.split(state.rng)
+    if net is None:
+        net = sample_network_state(k_net, cfg, state.t)
+
+    if spec.learning_aid:
+        eff = _tree_affine(state.mults, state.emp_mults, _pi(cfg))
+    else:
+        eff = state.mults
+
+    collect = _COLLECTORS[spec.collection]
+    train = _TRAINERS[spec.training]
+    alpha, theta = collect(cfg, net, eff, state.queues, spec.exact)
+    x, y, z = train(cfg, net, eff, state.queues, spec.exact, spec.use_lsa)
+
+    served = _served(alpha, theta, net, state.queues)
+    cost = framework_cost(net, served, x, y)
+    queues = apply_decision(cfg, state.queues, net, served, x, y)
+    mults = update_multipliers(cfg, state.mults, net, served, x, y, spec.use_lsa, cfg.eps)
+
+    emp = state.emp_mults
+    if spec.learning_aid:
+        # Virtual decisions from plain P1/P2 with the empirical multipliers;
+        # they update Theta' only (diminishing step), never the real queues.
+        v_alpha, v_theta = _collect_plain(cfg, net, state.emp_mults, state.queues, False)
+        v_x, v_y, _ = _train_linear(cfg, net, state.emp_mults, state.queues, False, spec.use_lsa)
+        v_served = _served(v_alpha, v_theta, net, state.queues)
+        sigma = cfg.sigma0 / jnp.sqrt(state.t.astype(jnp.float32) + 1.0)
+        emp = update_multipliers(cfg, state.emp_mults, net, v_served, v_x, v_y,
+                                 spec.use_lsa, sigma)
+
+    trained = jnp.sum(x) + jnp.sum(y)
+    new_state = SchedulerState(
+        queues=queues, mults=mults, emp_mults=emp,
+        t=state.t + 1,
+        total_cost=state.total_cost + cost,
+        total_trained=state.total_trained + trained,
+        uploaded=state.uploaded + jnp.sum(served, axis=1),
+        rng=rng,
+    )
+    rec = SlotRecord(
+        cost=cost, trained=trained,
+        q_backlog=jnp.sum(queues.q), r_backlog=jnp.sum(queues.r),
+        skew=skew_degree(cfg, queues.omega),
+    )
+    dec = Decision(alpha=alpha, theta=theta, x=x, y=y, z=z)
+    return new_state, rec, dec
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _run_scan(cfg: CocktailConfig, spec: AlgoSpec, n_slots: int,
+              state: SchedulerState) -> tuple[SchedulerState, SlotRecord]:
+    def body(s, _):
+        s2, rec, _ = step(cfg, spec, s)
+        return s2, rec
+
+    return jax.lax.scan(body, state, None, length=n_slots)
+
+
+def run(cfg: CocktailConfig, spec: AlgoSpec, n_slots: int,
+        state: Optional[SchedulerState] = None) -> tuple[SchedulerState, SlotRecord]:
+    """Run n_slots of the online algorithm; returns (final state, stacked
+    per-slot records)."""
+    if state is None:
+        state = init_state(cfg)
+    if not spec.exact:
+        return _run_scan(cfg, spec, n_slots, state)
+    recs = []
+    for _ in range(n_slots):
+        state, rec, _ = step(cfg, spec, state)
+        recs.append(rec)
+    stacked = SlotRecord(*[jnp.stack([getattr(r, f) for r in recs])
+                           for f in SlotRecord._fields])
+    return state, stacked

@@ -1,0 +1,166 @@
+"""Core pytree types for the Cocktail scheduler.
+
+Notation follows the paper (Section II):
+  N CUs (data sources, index i), M ECs (ML workers, index j/k).
+  Q[i]      CU data queue backlog (eq. 1)
+  R[i,j]    per-CU queue maintained at EC j (eq. 12)
+  Omega[i,j] cumulative samples from CU i trained by EC j (eq. 9)
+  mu[i], eta[i,j], phi[i,j], lam[i,j]  Lagrange multipliers for (16a)-(16d)
+
+Decisions per slot:
+  alpha[i,j] in {0,1}  CU i connected to EC j          (constraint 2)
+  theta[i,j] >= 0      connection duration fraction     (constraint 3)
+  x[i,j]     >= 0      samples from R[i,j] trained at j (constraint 8,13)
+  y[i,j,k]   >= 0      samples from R[i,j] offloaded to and trained at k
+                       (constraints 5-8,13)
+  z[j,k] in {0,1}      EC j paired with EC k            (constraint 5)
+
+All quantities are in units of one data sample; computing capacity f is in
+cycles and rho converts cycles -> samples (F = f / rho samples per slot).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CocktailConfig:
+    """Static configuration of one Cocktail network slice (one training job)."""
+
+    n_cu: int  # N data sources
+    n_ec: int  # M ML workers
+    delta: float = 0.02  # long-term skew tolerance (eq. 9)
+    eps: float = 0.1  # multiplier SGD step size
+    rho: float = 1.0  # compute cycles per sample (f/rho = samples/slot)
+    q0: float = 5000.0  # initial CU queue backlog (paper: "sufficient")
+    # Average data generation rate per CU; scalar -> uniform.
+    zeta: float | np.ndarray = 500.0
+    # Baselines for the stochastic network state (paper Sec. IV-A/IV-C).
+    d_base: float = 2000.0  # CU-EC transmission capacity baseline (samples/slot)
+    cap_d_base: float = 8000.0  # EC-EC transmission capacity baseline
+    f_base: float | np.ndarray = 20000.0  # EC computing capacity baseline (cycles)
+    c_base: float = 500.0  # unit CU->EC transmission cost
+    e_base: float = 30.0  # unit EC<->EC transmission cost
+    p_base: float = 100.0  # unit computing cost
+    # Learning-aid parameters.
+    sigma0: float = 1.0  # empirical multiplier base step (diminishing sigma0/sqrt t)
+    # Pair-allocation solver iterations (projected gradient ascent).
+    pair_iters: int = 120
+    seed: int = 0
+
+    @property
+    def zeta_vec(self) -> np.ndarray:
+        z = np.asarray(self.zeta, dtype=np.float64)
+        if z.ndim == 0:
+            z = np.full((self.n_cu,), float(z))
+        assert z.shape == (self.n_cu,)
+        return z
+
+    @property
+    def proportions(self) -> np.ndarray:
+        z = self.zeta_vec
+        return z / z.sum()
+
+    @property
+    def delta_lo(self) -> np.ndarray:  # \check{delta}_i
+        return np.maximum(self.proportions - self.delta, 0.0)
+
+    @property
+    def delta_hi(self) -> np.ndarray:  # \hat{delta}_i
+        return np.minimum(self.proportions + self.delta, 1.0)
+
+
+class NetworkState(NamedTuple):
+    """Time-varying network state S(t) plus arrivals A(t) for one slot."""
+
+    d: jax.Array  # (N, M) CU->EC transmission capacity, samples/slot
+    cap_d: jax.Array  # (M, M) EC<->EC transmission capacity (symmetric, 0 diag)
+    f: jax.Array  # (M,)  EC computing capacity, cycles/slot
+    c: jax.Array  # (N, M) unit CU->EC transmission cost
+    e: jax.Array  # (M, M) unit EC<->EC transmission cost
+    p: jax.Array  # (M,)  unit computing cost
+    arrivals: jax.Array  # (N,) generated samples A_i(t)
+
+
+class Multipliers(NamedTuple):
+    mu: jax.Array  # (N,)   queue-stability for Q   (16a)
+    eta: jax.Array  # (N, M) queue-stability for R   (16b)
+    phi: jax.Array  # (N, M) skew lower bound        (16c)
+    lam: jax.Array  # (N, M) skew upper bound        (16d)
+
+    @staticmethod
+    def zeros(n_cu: int, n_ec: int, q0: float = 0.0, eps: float = 0.1) -> "Multipliers":
+        # mu is initialised consistently with the Q0 backlog (mu = eps * Q).
+        return Multipliers(
+            mu=jnp.full((n_cu,), q0 * eps, jnp.float32),
+            eta=jnp.zeros((n_cu, n_ec), jnp.float32),
+            phi=jnp.zeros((n_cu, n_ec), jnp.float32),
+            lam=jnp.zeros((n_cu, n_ec), jnp.float32),
+        )
+
+
+class QueueState(NamedTuple):
+    q: jax.Array  # (N,)   CU queues
+    r: jax.Array  # (N, M) CU queues at ECs
+    omega: jax.Array  # (N, M) cumulative trained per (CU, EC)
+
+    @staticmethod
+    def init(n_cu: int, n_ec: int, q0: float) -> "QueueState":
+        return QueueState(
+            q=jnp.full((n_cu,), q0, jnp.float32),
+            r=jnp.zeros((n_cu, n_ec), jnp.float32),
+            omega=jnp.zeros((n_cu, n_ec), jnp.float32),
+        )
+
+
+class Decision(NamedTuple):
+    alpha: jax.Array  # (N, M) {0,1}
+    theta: jax.Array  # (N, M) >= 0, sum_i theta[:, j] <= 1
+    x: jax.Array  # (N, M) >= 0
+    y: jax.Array  # (N, M, M) y[i, j, k]: from R[i,j], trained at k
+    z: jax.Array  # (M, M) {0,1} symmetric pairing
+
+    @property
+    def collected(self) -> jax.Array:  # (N, M) samples moved CU->EC this slot
+        return self.alpha * self.theta  # NB: caller multiplies by d
+
+    @staticmethod
+    def zeros(n_cu: int, n_ec: int) -> "Decision":
+        return Decision(
+            alpha=jnp.zeros((n_cu, n_ec), jnp.float32),
+            theta=jnp.zeros((n_cu, n_ec), jnp.float32),
+            x=jnp.zeros((n_cu, n_ec), jnp.float32),
+            y=jnp.zeros((n_cu, n_ec, n_ec), jnp.float32),
+            z=jnp.zeros((n_ec, n_ec), jnp.float32),
+        )
+
+
+class SchedulerState(NamedTuple):
+    """Full state carried slot-to-slot by DataSche / L-DS."""
+
+    queues: QueueState
+    mults: Multipliers
+    emp_mults: Multipliers  # empirical multipliers Theta' (L-DS only; zeros for DS)
+    t: jax.Array  # scalar int32 slot counter
+    total_cost: jax.Array  # scalar accumulated framework cost
+    total_trained: jax.Array  # scalar accumulated |D(t)|
+    uploaded: jax.Array  # (N,) cumulative per-CU uploads (Fig. 5 metric)
+    rng: jax.Array  # PRNG key for stochastic network state
+
+
+def init_state(cfg: CocktailConfig) -> SchedulerState:
+    return SchedulerState(
+        queues=QueueState.init(cfg.n_cu, cfg.n_ec, cfg.q0),
+        mults=Multipliers.zeros(cfg.n_cu, cfg.n_ec, cfg.q0, cfg.eps),
+        emp_mults=Multipliers.zeros(cfg.n_cu, cfg.n_ec, cfg.q0, cfg.eps),
+        t=jnp.asarray(0, jnp.int32),
+        total_cost=jnp.asarray(0.0, jnp.float32),
+        total_trained=jnp.asarray(0.0, jnp.float32),
+        uploaded=jnp.zeros((cfg.n_cu,), jnp.float32),
+        rng=jax.random.PRNGKey(cfg.seed),
+    )

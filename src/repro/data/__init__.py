@@ -1,0 +1,5 @@
+"""Data substrate: non-IID CU sources + the Cocktail decision->batch bridge."""
+from .sampler import CocktailSampler
+from .sources import TokenSource, TrafficSource
+
+__all__ = ["CocktailSampler", "TokenSource", "TrafficSource"]

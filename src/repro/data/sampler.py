@@ -1,0 +1,99 @@
+"""CocktailSampler: the bridge from scheduler decisions to training batches.
+
+Each slot the core scheduler emits x[i,j] / y[i,j,k] (samples of CU i trained
+at EC j). With ECs mapped to data-parallel groups (DESIGN.md §2), the sampler
+
+  1. converts the per-EC trained counts into an integer batch composition
+     (how many sequences of each source each EC's shard trains this step),
+  2. draws that many sequences from each ``TokenSource``,
+  3. emits per-sample weights so the weighted-mean loss implements the
+     |D_j|-weighted parameter-server aggregation (paper eq. 15).
+
+The same machinery also drives the traffic-prediction testbed task (fig. 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import CocktailConfig, Decision
+from repro.data.sources import TokenSource
+
+
+@dataclasses.dataclass
+class CocktailSampler:
+    cfg: CocktailConfig
+    sources: Sequence[TokenSource]
+    batch_per_ec: int  # sequences each EC contributes to the global batch
+    seed: int = 0
+
+    def __post_init__(self):
+        assert len(self.sources) == self.cfg.n_cu
+        self._rng = np.random.default_rng(self.seed)
+
+    def composition(self, decision: Decision) -> np.ndarray:
+        """(M, N) integer counts: sequences from CU i trained by EC j this
+        step, scaled so each EC trains at most batch_per_ec sequences and
+        proportions follow trained_at = x + sum_j y."""
+        x = np.asarray(decision.x, np.float64)
+        y = np.asarray(decision.y, np.float64)
+        trained_at = x + y.sum(axis=1)  # (N, M)
+        comp = np.zeros((self.cfg.n_ec, self.cfg.n_cu), np.int64)
+        for j in range(self.cfg.n_ec):
+            col = trained_at[:, j]
+            tot = col.sum()
+            if tot <= 0:
+                continue
+            frac = col / tot * self.batch_per_ec
+            cnt = np.floor(frac).astype(np.int64)
+            rem = self.batch_per_ec - cnt.sum()
+            if rem > 0:
+                order = np.argsort(-(frac - cnt))
+                cnt[order[:rem]] += 1
+            comp[j] = cnt
+        return comp
+
+    def sample(self, decision: Decision) -> dict:
+        """Build the global batch for one step.
+
+        Returns dict(tokens (M*B, S), labels, weights (M*B,), source_ids,
+        ec_ids). weights scale each EC's samples by its |D_j| share (eq. 15);
+        ECs that trained nothing this slot get zero-weight filler samples.
+        """
+        comp = self.composition(decision)  # (M, N)
+        trained = np.asarray(decision.x, np.float64) + \
+            np.asarray(decision.y, np.float64).sum(axis=1)
+        d_j = trained.sum(axis=0)  # |D_j|
+        mean_d = d_j.mean() if d_j.sum() > 0 else 1.0
+
+        toks, weights, src_ids, ec_ids = [], [], [], []
+        for j in range(self.cfg.n_ec):
+            w_j = d_j[j] / max(mean_d, 1e-9)
+            n_filled = 0
+            for i in range(self.cfg.n_cu):
+                n = int(comp[j, i])
+                if n == 0:
+                    continue
+                toks.append(self.sources[i].sample(n))
+                weights.extend([w_j] * n)
+                src_ids.extend([i] * n)
+                ec_ids.extend([j] * n)
+                n_filled += n
+            if n_filled < self.batch_per_ec:  # zero-weight padding
+                pad = self.batch_per_ec - n_filled
+                toks.append(self.sources[0].sample(pad))
+                weights.extend([0.0] * pad)
+                src_ids.extend([0] * pad)
+                ec_ids.extend([j] * pad)
+        tokens = np.concatenate(toks, axis=0)
+        labels = np.roll(tokens, -1, axis=1).copy()
+        labels[:, -1] = -1
+        return {
+            "tokens": tokens.astype(np.int32),
+            "labels": labels.astype(np.int32),
+            "weights": np.asarray(weights, np.float32),
+            "source_ids": np.asarray(src_ids, np.int32),
+            "ec_ids": np.asarray(ec_ids, np.int32),
+        }

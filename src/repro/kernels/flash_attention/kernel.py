@@ -1,0 +1,164 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Design (TPU-native, not a CUDA port):
+  * grid (B, H, n_q_blocks, n_kv_blocks), kv innermost — the online-softmax
+    state (m, l, acc) lives in VMEM scratch and survives across kv steps;
+  * BlockSpecs stream HBM->VMEM tiles of q (Bq x hd), k/v (Bk x hd) with the
+    MXU-aligned last dims (hd and Bk are multiples of 128 for full configs);
+  * GQA handled in the index map: q head h reads kv head h // group — no kv
+    replication in memory;
+  * causal / sliding-window / prefix masks are computed from the position
+    blocks; fully-masked (q_blk, kv_blk) tiles skip the matmuls entirely via
+    @pl.when (this is where the kernel beats the chunked-jnp fallback, which
+    cannot skip);
+  * fp32 accumulation; attention soft-capping (gemma2) fused into the tile.
+
+The backward pass uses jax.custom_vjp with recompute-from-residuals falling
+back to the chunked-jnp path — the fwd kernel is the serving/prefill hot
+spot the roofline targets. Validated in interpret mode against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import AttnSpec
+
+_NEG = -1e30
+
+
+def _fwd_kernel(qp_ref, kp_ref, kval_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, spec: AttnSpec, scale: float,
+                n_kv_blocks: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qp_ref[0, :]  # (Bq,)
+    kv_pos = kp_ref[0, :]  # (Bk,)
+    kv_ok = kval_ref[0, :]  # (Bk,) bool
+
+    # block-level mask; skip the tile when nothing is visible
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    mask = (kp <= qp) if spec.causal else jnp.ones_like(kp <= qp)
+    if spec.window > 0:
+        mask = mask & (qp - kp < spec.window)
+    if spec.prefix_len > 0:
+        mask = mask | (kp < spec.prefix_len)
+    mask = mask & kv_ok[None, :]
+
+    @pl.when(jnp.any(mask))
+    def _tile():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # (Bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (Bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if spec.softcap > 0:
+            logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+        logits = jnp.where(mask, logits, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((m_ref[...] > _NEG / 2)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def _fwd(q, k, v, q_pos, kv_pos, spec: AttnSpec, kv_valid, scale,
+         block_q: int, block_kv: int, interpret: bool):
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    bk = min(block_kv, skv)
+    while skv % bk:
+        bk //= 2
+    bq, bk = max(bq, 1), max(bk, 1)
+    nq, nk = sq // bq, skv // bk
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, skv), bool)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(_fwd_kernel, spec=spec, scale=scale,
+                               n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda ib, ih, iq, ik: (ib, iq)),  # q_pos
+            pl.BlockSpec((1, bk), lambda ib, ih, iq, ik: (ib, ik)),  # kv_pos
+            pl.BlockSpec((1, bk), lambda ib, ih, iq, ik: (ib, ik)),  # kv_valid
+            pl.BlockSpec((1, bq, 1, hd), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // group, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda ib, ih, iq, ik: (ib, ik, ih // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),  # acc
+            pltpu.VMEM((bq,), jnp.float32),  # m
+            pltpu.VMEM((bq,), jnp.float32),  # l
+        ],
+        interpret=interpret,
+    )(q_pos, kv_pos, kv_valid, q, k, v)
+
+
+def flash_attention_pallas(q, k, v, q_pos, kv_pos, spec: AttnSpec,
+                           kv_valid=None, scale: Optional[float] = None,
+                           block_q: int = 512, block_kv: int = 512,
+                           interpret: bool = False):
+    """Forward flash attention via Pallas; differentiable via custom_vjp with
+    a chunked-jnp backward (recompute)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5 if scale is None else scale
+
+    @jax.custom_vjp
+    def _attn(q, k, v, q_pos, kv_pos, kv_valid):
+        return _fwd(q, k, v, q_pos, kv_pos, spec, kv_valid, scale,
+                    block_q, block_kv, interpret)
+
+    def _attn_fwd(q, k, v, q_pos, kv_pos, kv_valid):
+        out = _fwd(q, k, v, q_pos, kv_pos, spec, kv_valid, scale,
+                   block_q, block_kv, interpret)
+        return out, (q, k, v, q_pos, kv_pos, kv_valid)
+
+    def _attn_bwd(res, g):
+        from .ops import attention_chunked
+        q, k, v, q_pos, kv_pos, kv_valid = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: attention_chunked(
+                q_, k_, v_, q_pos, kv_pos, spec, kv_valid, scale), q, k, v)
+        dq, dk, dv = vjp(g)
+        return dq, dk, dv, None, None, None
+
+    _attn.defvjp(_attn_fwd, _attn_bwd)
+    if kv_valid is None:
+        kv_valid = jnp.ones((q.shape[0], k.shape[1]), bool)
+    return _attn(q, k, v, q_pos, kv_pos, kv_valid)

@@ -1,0 +1,91 @@
+"""Pure-jnp attention oracle + mask/spec types shared by all attention paths.
+
+``attention_ref`` is the exact O(S^2)-memory reference the Pallas kernel and
+the chunked jnp path are tested against. Supports GQA, causal / sliding
+window / prefix-LM masking, attention-logit soft-capping and padded-KV
+validity (decode caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    causal: bool = True
+    window: int = 0  # 0 = unlimited; >0: q attends kv with q_pos - kv_pos < window
+    softcap: float = 0.0  # attention-logit tanh cap (gemma2)
+    prefix_len: int = 0  # prefix-LM: kv_pos < prefix_len visible to all
+
+
+def attention_mask(q_pos: jax.Array, kv_pos: jax.Array, spec: AttnSpec,
+                   kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean (B, Sq, Skv) mask from absolute positions (B, Sq), (B, Skv)."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    if spec.causal:
+        ok = k <= q
+    else:
+        ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if spec.window > 0:
+        ok = ok & (q - k < spec.window)
+    if spec.prefix_len > 0:
+        ok = ok | (k < spec.prefix_len)
+    if kv_valid is not None:
+        ok = ok & kv_valid[:, None, :]
+    return ok
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  q_pos: jax.Array, kv_pos: jax.Array, spec: AttnSpec,
+                  kv_valid: Optional[jax.Array] = None,
+                  scale: Optional[float] = None,
+                  gqa: str = "repeat") -> jax.Array:
+    """Exact grouped-query attention (fp32 softmax).
+
+    q: (B, Sq, H, hd);  k, v: (B, Skv, Hkv, hd). Returns (B, Sq, H, hd).
+
+    gqa='repeat': replicate kv heads (sharding-friendly when q heads are on
+    the TP axis — no sharded-dim reshape). gqa='group': reshape q into
+    (hkv, group) — used by the decode path where q is small/replicated and
+    the KV cache is sequence-sharded (repeating a sharded kv would force a
+    full-cache all-gather).
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = hd ** -0.5 if scale is None else scale
+    mask = attention_mask(q_pos, kv_pos, spec, kv_valid)
+    if group > 1 and gqa == "group":
+        qg = q.reshape(b, sq, hkv, group, hd)
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if spec.softcap > 0:
+            logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        any_ok = jnp.any(mask, axis=-1)[:, None, None, :, None]
+        probs = probs * any_ok
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+        return out.reshape(b, sq, h, hd).astype(q.dtype)
+    if group > 1:
+        # GQA by head replication: keeps every einsum free of sharded-dim
+        # reshapes (q heads shard on the TP axis; kv heads stay replicated).
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if spec.softcap > 0:
+        logits = spec.softcap * jnp.tanh(logits / spec.softcap)
+    logits = jnp.where(mask[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (invalid q) produce uniform probs; zero them out
+    any_ok = jnp.any(mask, axis=-1)[:, None, :, None]
+    probs = probs * any_ok
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,127 @@
+"""Production selective-scan paths.
+
+* ``mamba1_scan``: chunked associative scan — within a chunk a parallel
+  (log-depth) first-order recurrence, across chunks a short sequential scan
+  carrying (B, DI, N) state. Live memory O(B * chunk * DI * N) instead of
+  O(B * S * DI * N).
+* ``mamba2_scan``: the SSD chunked *matmul* form (Dao & Gu): intra-chunk
+  attention-like C@B^T masked by the decay kernel, inter-chunk via carried
+  (B, H, N, P) states. This is the MXU-native TPU adaptation — all heavy ops
+  are einsums over (chunk x chunk) or (N x P) tiles.
+
+Backend dispatch mirrors flash_attention: TPU -> Pallas kernel, else jnp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import mamba1_scan_ref, mamba2_scan_ref
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    return max(c, 1)
+
+
+def mamba1_scan_chunked(x, dt, a, b, c, h0=None, chunk: int = 256):
+    """Same contract as mamba1_scan_ref."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    cs = _pick_chunk(s, chunk)
+    nc = s // cs
+    h0 = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    xf = x.reshape(bsz, nc, cs, di).astype(jnp.float32)
+    dtf = dt.reshape(bsz, nc, cs, di).astype(jnp.float32)
+    bf = b.reshape(bsz, nc, cs, n).astype(jnp.float32)
+    cf = c.reshape(bsz, nc, cs, n).astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp  # (B, cs, DI), ..., (B, cs, N)
+        da = jnp.exp(dtc[..., None] * a[None, None])  # (B, cs, DI, N)
+        dbx = (dtc * xc)[..., None] * bc[:, :, None, :]  # (B, cs, DI, N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+        hs = a_cum * h[:, None] + b_cum  # (B, cs, DI, N)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc)
+        return hs[:, -1], y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    # remat: keep the (B, cs, DI, N) chunk intermediates out of the residuals
+    h, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di).astype(x.dtype)
+    return y, h
+
+
+def mamba2_scan_chunked(x, dt, a, b, c, h0=None, chunk: int = 128):
+    """Same contract as mamba2_scan_ref (SSD matmul form)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    cs = _pick_chunk(s, chunk)
+    nc = s // cs
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    xf = x.reshape(bsz, nc, cs, h, p).astype(jnp.float32)
+    dtf = dt.reshape(bsz, nc, cs, h).astype(jnp.float32)
+    bf = b.reshape(bsz, nc, cs, n).astype(jnp.float32)
+    cf = c.reshape(bsz, nc, cs, n).astype(jnp.float32)
+
+    def chunk_body(hst, inp):
+        xc, dtc, bc, cc = inp  # (B,cs,H,P), (B,cs,H), (B,cs,N), (B,cs,N)
+        dta = dtc * a[None, None]  # (B, cs, H) negative increments
+        cum = jnp.cumsum(dta, axis=1)  # (B, cs, H)
+        # intra-chunk: decay kernel L[i,j] = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B, i, j, H)
+        mask = jnp.tril(jnp.ones((cs, cs), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)  # (B, i, j)
+        w = cb[..., None] * lmat  # (B, i, j, H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, dtc[..., None] * xc)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhnp,bih->bihp", cc, hst, jnp.exp(cum))
+        # state update: S <- exp(total) * S + sum_j exp(total - cum_j) dt_j B_j x_j^T
+        total = cum[:, -1, :]  # (B, H)
+        decay_j = jnp.exp(total[:, None, :] - cum)  # (B, cs, H)
+        s_new = jnp.einsum("bjn,bjh,bjhp->bhnp", bc, decay_j * dtc, xc)
+        hst = jnp.exp(total)[..., None, None] * hst + s_new
+        return hst, y_intra + y_inter
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bf, 1, 0), jnp.moveaxis(cf, 1, 0))
+    # remat: keep the (B, cs, cs, H) decay kernel out of the residuals
+    hst, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p).astype(x.dtype)
+    return y, hst
+
+
+def mamba1_scan(x, dt, a, b, c, h0=None, chunk: int = 256,
+                impl: str = "auto", interpret: bool = False):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "pallas":
+        from . import kernel
+        return kernel.mamba1_scan_pallas(x, dt, a, b, c, h0=h0, chunk=chunk,
+                                         interpret=interpret)
+    if impl == "chunked":
+        return mamba1_scan_chunked(x, dt, a, b, c, h0, chunk)
+    return mamba1_scan_ref(x, dt, a, b, c, h0)
+
+
+def mamba2_scan(x, dt, a, b, c, h0=None, chunk: int = 128,
+                impl: str = "auto", interpret: bool = False):
+    if impl == "auto":
+        impl = "chunked"  # SSD matmul form is already MXU-native
+    if impl == "chunked":
+        return mamba2_scan_chunked(x, dt, a, b, c, h0, chunk)
+    return mamba2_scan_ref(x, dt, a, b, c, h0)

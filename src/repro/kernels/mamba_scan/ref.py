@@ -1,0 +1,71 @@
+"""Sequential (exact) selective-scan oracles for Mamba-1 and Mamba-2.
+
+These are the correctness references: plain ``lax.scan`` over time, one step
+per token. The production paths (chunked matmul forms in ops.py / the Pallas
+kernel) are tested against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba1_scan_ref(x, dt, a, b, c, h0=None):
+    """Mamba-1 selective scan, sequential.
+
+    x:  (B, S, DI)   input sequence (post conv + activation)
+    dt: (B, S, DI)   positive step sizes (post softplus)
+    a:  (DI, N)      negative state matrix (A = -exp(a_log))
+    b:  (B, S, N)    input projection
+    c:  (B, S, N)    output projection
+    h0: (B, DI, N)   optional initial state
+    Returns (y (B, S, DI), h_final (B, DI, N)).
+    """
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    h0 = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,DI), (B,DI), (B,N), (B,N)
+        da = jnp.exp(dtt[..., None] * a[None])  # (B, DI, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def mamba2_scan_ref(x, dt, a, b, c, h0=None):
+    """Mamba-2 (SSD) scan, sequential. Scalar decay per head.
+
+    x:  (B, S, H, P)  head-split inputs
+    dt: (B, S, H)     positive step sizes
+    a:  (H,)          negative per-head decay log-rate (A = -exp(a_log))
+    b:  (B, S, N)     shared (MQA-style) input projection
+    c:  (B, S, N)     shared output projection
+    h0: (B, H, N, P)  optional initial state
+    Returns (y (B, S, H, P), h_final (B, H, N, P)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(hst, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        da = jnp.exp(dtt * a[None])  # (B, H)
+        upd = jnp.einsum("bn,bhp->bhnp", bt, dtt[..., None] * xt)
+        hst = da[..., None, None] * hst + upd
+        y = jnp.einsum("bhnp,bn->bhp", hst, ct)
+        return hst, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32))
+    hst, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hst

@@ -1,0 +1,15 @@
+"""Dispatch for the greedy-assignment kernel."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import greedy_assignment_pallas
+from .ref import greedy_assignment_ref
+
+
+def greedy_assignment(w, impl: str = "auto", interpret: bool = False):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return greedy_assignment_pallas(w, interpret=interpret)
+    return greedy_assignment_ref(w)

@@ -1,0 +1,5 @@
+"""Oracle for the greedy-assignment kernel: the (already tested) jnp
+sequential greedy from the core scheduler."""
+from repro.core.matching import greedy_assignment as greedy_assignment_ref
+
+__all__ = ["greedy_assignment_ref"]

@@ -1,0 +1,6 @@
+"""Launch layer: production mesh, train/serve steps, multi-pod dry-run."""
+from .mesh import make_host_mesh, make_production_mesh
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["make_host_mesh", "make_production_mesh", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on 512
+placeholder host devices and extract the roofline terms.
+
+MUST be invoked as its own process (the XLA flag above must precede any jax
+initialization — hence the import-position violation, which is deliberate
+and required):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k --mesh pod --out experiments/dryrun
+
+Outputs one JSON per cell with:
+  memory: per-device argument/temp/peak bytes (compiled.memory_analysis())
+  cost:   per-device HLO flops + bytes accessed (compiled.cost_analysis())
+  collectives: per-op-kind byte totals parsed from the post-SPMD HLO
+  roofline: compute/memory/collective seconds vs TPU v5e constants
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import functools  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES, all_configs, get_config  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import AdamWConfig, AdamWState, adamw_init  # noqa: E402
+from repro.parallel.sharding import mesh_context, shard_params_pspecs  # noqa: E402
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+HBM_BYTES = 16 * 2 ** 30  # v5e HBM capacity
+
+
+def analytic_memory(cfg, shape_name: str, kind: str, mesh_shape: tuple,
+                    cache_abs=None, cache_specs=None, style: str = "tp") -> dict:
+    """TPU-projected per-device memory residency + HBM traffic (bytes).
+
+    The compiled CPU artifact over-materialises (different fusion heuristics,
+    f32 promotion of reductions), so the ``memory_s`` roofline term uses this
+    analytic model; the HLO-derived traffic is reported alongside as an
+    upper bound. Constants documented in EXPERIMENTS.md §Roofline.
+    """
+    seq, gb, _ = SHAPES[shape_name]
+    n_chips = 1
+    for d in mesh_shape:
+        n_chips *= d
+    model_sz = mesh_shape[-1]
+    dp = n_chips // model_sz
+    p_total = cfg.n_params()
+    p_active = cfg.n_active_params()
+    tok_dev = gb * seq // dp
+    b_dev = max(gb // dp, 1)
+    d_model, n_layers = cfg.d_model, cfg.n_layers
+    v_shard = (cfg.vocab_size // model_sz if cfg.vocab_size % model_sz == 0
+               else cfg.vocab_size)
+
+    if kind == "train":
+        # fp32 master + adam m/v sharded over (data x model); bf16 cast and
+        # f32 grads are transient but coexist with activations at peak.
+        state = p_total * 12 / n_chips
+        transients = p_total * 6 / n_chips  # bf16 copy + f32 grad shard
+        act = n_layers * b_dev * seq * d_model * 2  # remat: one carry/layer
+        if style == "tp_sp":  # sequence-sharded carries
+            act /= model_sz
+        logits = 2 * tok_dev * v_shard * 4
+        residency = state + transients + act + logits
+        # traffic: 3 weight passes (fwd + remat + bwd) over the gathered TP
+        # shard; optimizer read/write; activation carries w+r; logits io.
+        w_shard = p_active * 2 / model_sz
+        traffic = 3 * w_shard + p_total * 24 / n_chips + 2 * act + 2 * logits
+    elif kind == "prefill":
+        state = p_total * 2 / n_chips  # bf16 serving weights
+        act = b_dev * seq * d_model * 2 * 4  # few live layers, no bwd
+        kv = 0.0
+        if cfg.n_kv_heads and cfg.family not in ("ssm",):
+            kv = (n_layers * b_dev * seq * cfg.n_kv_heads
+                  * cfg.resolved_head_dim * 2 * 2 / model_sz)
+        residency = state + act + kv
+        traffic = p_active * 2 / model_sz + 2 * act + kv
+    else:  # decode
+        state = p_total * 2 / n_chips
+        cache_dev = 0.0
+        if cache_abs is not None:
+            ms = dict(zip(("pod", "data", "model")[-len(mesh_shape):], mesh_shape))
+            for name, leaf in cache_abs.items():
+                nb = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+                shards = 1
+                if cache_specs is not None and name in cache_specs:
+                    spec = getattr(cache_specs[name], "spec", cache_specs[name])
+                    for entry in spec:
+                        axes = (entry,) if isinstance(entry, str) else (entry or ())
+                        for ax in axes:
+                            shards *= ms.get(ax, 1)
+                cache_dev += nb / shards
+        residency = state + cache_dev
+        # per decoded token: all weights (TP shard) + the whole local cache
+        traffic = p_active * 2 / model_sz + cache_dev
+    return {"residency_bytes": float(residency), "traffic_bytes": float(traffic),
+            "fits_hbm": bool(residency <= HBM_BYTES)}
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\(|[a-z0-9]+\[)[^)]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind (per-device, post-SPMD HLO).
+
+    For while-loop bodies (scan-over-layers) HLO lists the body once; we
+    multiply by the trip count parsed from the loop metadata when present.
+    """
+    out: dict[str, float] = {}
+    trip = 1
+    trip_counts: dict[str, int] = {}
+    # map computation name -> trip count from while loops
+    for m in re.finditer(r"while\([^)]*\).*?body=%?([\w.\-]+)", hlo_text):
+        pass
+    # conservative: detect known trip counts via "trip_count=N" backend hints
+    for line in hlo_text.splitlines():
+        mm = _COLL_RE.search(line)
+        if not mm:
+            continue
+        kind = mm.group(2).lower()
+        nbytes = _type_bytes(mm.group(1))
+        out[kind] = out.get(kind, 0.0) + float(nbytes)
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """Extract known trip counts (xla marks them in loop backend configs)."""
+    return [int(x) for x in re.findall(r'"known_trip_count":\{"n":"(\d+)"\}', hlo_text)]
+
+
+def _scan_collective_multiplier(hlo_text: str) -> dict:
+    """Collectives inside while bodies execute trip_count times. We detect
+    which computations are while bodies with known trip counts and scale
+    collective bytes found inside them."""
+    # split HLO into computations
+    comps = re.split(r"\n(?=%?[\w.\-]+ \([\w.,%: \[\]\-]*\) -> )", hlo_text)
+    # find while calls: body=%name with known_trip_count in same line/block
+    body_trips: dict[str, int] = {}
+    for m in re.finditer(r'body=%?([\w.\-]+)[^\n]*', hlo_text):
+        line = m.group(0)
+        t = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+        if t:
+            body_trips[m.group(1)] = int(t.group(1))
+    totals: dict[str, float] = {}
+    for comp in comps:
+        header = comp.splitlines()[0] if comp.splitlines() else ""
+        name_m = re.match(r"%?([\w.\-]+) \(", header)
+        mult = 1
+        if name_m and name_m.group(1) in body_trips:
+            mult = body_trips[name_m.group(1)]
+        for line in comp.splitlines():
+            mm = _COLL_RE.search(line)
+            if not mm:
+                continue
+            kind = mm.group(2).lower()
+            totals[kind] = totals.get(kind, 0.0) + float(_type_bytes(mm.group(1))) * mult
+    return totals
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_cfg: AdamWConfig = AdamWConfig(), style: str = "tp",
+               pad_vocab: bool = False):
+    """Lower + compile one cell; returns (record dict, compiled)."""
+    cfg = get_config(arch)
+    if pad_vocab and cfg.vocab_size % 128:
+        # pad the vocab to a TP-shardable multiple (padded logits rows are
+        # never labelled; standard practice, counted in the FLOPs honestly)
+        cfg = dataclasses.replace(cfg, vocab_size=-(-cfg.vocab_size // 128) * 128)
+    if shape_name not in cfg.shapes():
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long-context cell skipped: full-attention arch "
+                          "(DESIGN.md §4)"}, None
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, gb, kind = SHAPES[shape_name]
+    t0 = time.time()
+
+    def ns(tree):  # PartitionSpec tree -> NamedSharding tree
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    with mesh_context(mesh, style=style):
+        params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_specs = ns(shard_params_pspecs(params_abs, mesh))
+        if kind == "train":
+            opt_abs = jax.eval_shape(adamw_init, params_abs)
+            o_specs = AdamWState(step=ns(P()), m=p_specs, v=p_specs)
+            batch_abs = S.batch_abstract(cfg, shape_name, "train")
+            b_specs = ns(S.batch_pspecs(cfg, shape_name, "train", mesh))
+            step = make_train_step(model, opt_cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_specs, o_specs, b_specs),
+                out_shardings=(p_specs, o_specs,
+                               ns({"loss": P(), "tokens": P(), "grad_norm": P()})),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif kind == "prefill":
+            batch_abs = S.batch_abstract(cfg, shape_name, "prefill")
+            raw_b = S.batch_pspecs(cfg, shape_name, "prefill", mesh)
+            b_specs = ns(raw_b)
+            step = make_prefill_step(model)
+            v_ax = "model" if cfg.vocab_size % (512 if multi_pod else 256) == 0 or \
+                cfg.vocab_size % 16 == 0 else None
+            logits_spec = ns(P(raw_b["tokens"][0], None, v_ax))
+            jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                             out_shardings=logits_spec)
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs, tok_abs = S.decode_abstract(cfg, model, shape_name)
+            raw_c, t_spec_raw = S.decode_pspecs(cfg, cache_abs, shape_name, mesh)
+            c_specs, t_spec = ns(raw_c), ns(t_spec_raw)
+            step = make_serve_step(model)
+            jitted = jax.jit(step, in_shardings=(p_specs, c_specs, t_spec),
+                             out_shardings=(t_spec, c_specs),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs)
+        compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    hc = hlo_cost.analyze(hlo)
+
+    n_chips = 512 if multi_pod else 256
+    mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
+    flops_dev = hc.flops
+    bytes_dev = hc.memory_traffic
+    coll_bytes = hc.total_collective_bytes
+    eff_mesh = mesh_shape if style != "fsdp" else (n_chips, 1)
+    if kind == "decode":
+        am = analytic_memory(cfg, shape_name, kind, eff_mesh,
+                             cache_abs=cache_abs, cache_specs=raw_c, style=style)
+    else:
+        am = analytic_memory(cfg, shape_name, kind, eff_mesh, style=style)
+    record = {
+        "arch": arch, "shape": shape_name, "kind": kind, "style": style,
+        "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": n_chips,
+        "seq": seq, "global_batch": gb,
+        "compile_seconds": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "bytes_written_per_device": hc.bytes_written,
+            "dot_operand_bytes": hc.dot_operand_bytes,
+            "xla_cost_analysis_flops_body_once": float(cost.get("flops", 0.0)),
+            "xla_cost_analysis_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+            "unknown_trip_whiles": hc.unknown_trip_whiles,
+        },
+        "collectives_bytes": dict(hc.collective_bytes),
+        "trip_counts": while_trip_counts(hlo),
+        "analytic_memory": am,
+        "roofline": {
+            "compute_s": flops_dev / PEAK_FLOPS,
+            "memory_s": am["traffic_bytes"] / HBM_BW,
+            "memory_s_hlo_upper": bytes_dev / HBM_BW,
+            "collective_s": coll_bytes / ICI_BW,
+        },
+    }
+    rf = record["roofline"]
+    record["roofline"]["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: rf[k])
+    record["roofline"]["step_s_lower_bound"] = max(
+        rf["compute_s"], rf["memory_s"], rf["collective_s"])
+    return record, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--style", default="tp",
+                    choices=["tp", "tp_sp", "fsdp", "serve"])
+    ap.add_argument("--pad-vocab", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = f"{args.arch}_{args.shape}_{args.mesh}".replace(".", "_").replace("/", "_")
+    if args.style != "tp":
+        tag += f"_{args.style}"
+    try:
+        record, compiled = lower_cell(args.arch, args.shape,
+                                      args.mesh == "multipod", style=args.style,
+                                      pad_vocab=args.pad_vocab)
+        if args.save_hlo and compiled is not None:
+            (outdir / f"{tag}.hlo.txt").write_text(compiled.as_text())
+    except Exception as e:  # record failures — they are bugs to fix
+        record = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    (outdir / f"{tag}.json").write_text(json.dumps(record, indent=2))
+    if "error" in record:
+        print(f"FAIL {tag}: {record['error'][:200]}")
+        raise SystemExit(1)
+    if record.get("skipped"):
+        print(f"SKIP {tag}: {record['reason']}")
+        return
+    rf = record["roofline"]
+    print(f"OK {tag}: compile={record['compile_seconds']}s "
+          f"peak={record['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+          f"compute={rf['compute_s']*1e3:.2f}ms mem={rf['memory_s']*1e3:.2f}ms "
+          f"coll={rf['collective_s']*1e3:.2f}ms -> {rf['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips (data x model).
+Multi-pod:  2 x 16 x 16 = 512 chips (pod x data x model); the `pod` axis is
+the slow (DCN/ICI-inter-pod) dimension — params replicate across it and the
+gradient all-reduce over it is where compression applies.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    mp = max(1, min(model_parallel, n))
+    return jax.make_mesh((n // mp, mp), ("data", "model"))

@@ -1,0 +1,140 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins (no
+device allocation) for the lowered step's inputs; ``*_pspecs`` build the
+matching PartitionSpecs. Cache sharding policy (decode):
+
+  batch dim   -> DP axes when divisible,
+  kv heads    -> 'model' when divisible,
+  else seq    -> 'model' (and the DP axes too when batch can't shard, e.g.
+                 long_500k with global_batch=1) — decode attention over a
+                 sequence-sharded KV is handled by GSPMD with a partial
+                 softmax + all-reduce (sequence-parallel decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import ModelApi
+from repro.parallel.sharding import batch_axes
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in batch_axes(mesh)]))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def batch_abstract(cfg: ArchConfig, shape_name: str, kind: str) -> dict:
+    """ShapeDtypeStructs for a train/prefill batch."""
+    seq, gb, _ = SHAPES[shape_name]
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        text = seq - cfg.n_img_tokens
+        out["tokens"] = jax.ShapeDtypeStruct((gb, text), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct((gb, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((gb, text), jnp.int32)
+    elif cfg.family == "encdec":
+        out["tokens"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+        out["frames"] = jax.ShapeDtypeStruct((gb, cfg.enc_ctx, cfg.d_model), jnp.float32)
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+        if kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((gb, seq), jnp.int32)
+    if kind == "train":
+        out["weights"] = jax.ShapeDtypeStruct((gb,), jnp.float32)
+    return out
+
+
+def batch_pspecs(cfg: ArchConfig, shape_name: str, kind: str, mesh: Mesh) -> dict:
+    seq, gb, _ = SHAPES[shape_name]
+    bax = batch_axes(mesh)
+    b = bax if gb % _dp_size(mesh) == 0 else None
+    specs = {}
+    for name in batch_abstract(cfg, shape_name, kind):
+        if name == "weights":
+            specs[name] = P(b)
+        elif name in ("patches", "frames"):
+            specs[name] = P(b, None, None)
+        else:
+            specs[name] = P(b, None)
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, cache_abs: dict, mesh: Mesh, gb: int) -> dict:
+    """PartitionSpecs for a decode cache pytree (see module docstring)."""
+    bax = batch_axes(mesh)
+    dp = _dp_size(mesh)
+    msz = _axis_size(mesh, "model")
+    b = bax if (gb % dp == 0 and gb >= dp) else None
+
+    def leaf_spec(name: str, shape: tuple) -> P:
+        if len(shape) == 0:
+            return P()
+        if name.startswith(("k", "v", "attn_k", "attn_v", "cross_k", "cross_v")) and len(shape) == 5:
+            n_, bb, s, h, hd = shape
+            h_ax = "model" if h % msz == 0 and h >= msz else None
+            s_parts = []
+            if b is None and s % dp == 0:
+                s_parts.extend(bax)
+            if h_ax is None and s % msz == 0:
+                s_parts.append("model")
+            s_ax = tuple(s_parts) if s_parts else None
+            return P(None, b, s_ax, h_ax, None)
+        if name.startswith(("kv_pos", "attn_pos")) and len(shape) == 3:
+            n_, bb, s = shape
+            s_parts = []
+            if b is None and s % dp == 0:
+                s_parts.extend(bax)
+            kvname = name.replace("kv_pos", "k").replace("attn_pos", "attn_k")
+            kv_shape = next((sh for nm, sh in abs_shapes if nm == kvname), None)
+            if kv_shape is not None:
+                h = kv_shape[3]
+                if not (h % msz == 0 and h >= msz) and s % msz == 0:
+                    s_parts.append("model")
+            s_ax = tuple(s_parts) if s_parts else None
+            return P(None, b, s_ax)
+        if name == "conv" and len(shape) == 4:  # (L, B, K-1, DI)
+            di = shape[3]
+            return P(None, b, None, "model" if di % msz == 0 else None)
+        if name == "h" and len(shape) == 4:  # mamba1 (L, B, DI, N)
+            di = shape[2]
+            return P(None, b, "model" if di % msz == 0 else None, None)
+        if name == "h" and len(shape) == 5:  # mamba2 (L, B, H, N, P)
+            h = shape[2]
+            return P(None, b, "model" if h % msz == 0 else None, None, None)
+        return P(*([None] * len(shape)))
+
+    abs_shapes = [(nm, tuple(leaf.shape)) for nm, leaf in cache_abs.items()]
+    return {nm: leaf_spec(nm, tuple(leaf.shape)) for nm, leaf in cache_abs.items()}
+
+
+def decode_abstract(cfg: ArchConfig, model: ModelApi, shape_name: str):
+    """(cache, tokens) ShapeDtypeStructs for a decode cell: a cache holding
+    `seq` tokens of context plus the next-token input."""
+    seq, gb, _ = SHAPES[shape_name]
+    cache_abs = jax.eval_shape(functools.partial(model.init_cache, gb, seq))
+    tokens = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    return cache_abs, tokens
+
+
+def decode_pspecs(cfg: ArchConfig, cache_abs: dict, shape_name: str, mesh: Mesh):
+    seq, gb, _ = SHAPES[shape_name]
+    bax = batch_axes(mesh)
+    b = bax if (gb % _dp_size(mesh) == 0 and gb >= _dp_size(mesh)) else None
+    return cache_pspecs(cfg, cache_abs, mesh, gb), P(b, None)

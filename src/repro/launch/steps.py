@@ -1,0 +1,76 @@
+"""Step builders: the pjit-able train / serve step functions.
+
+The Cocktail integration point is the `weights` field of the batch: the
+scheduler's per-EC sample counts become per-sample weights, so the global
+weighted-mean loss (and hence the single gradient all-reduce) implements the
+parameter server's |D_j|-weighted aggregation (paper eq. 15) exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+from repro.optim import AdamWConfig, AdamWState, adamw_init, adamw_update, cosine_schedule
+
+
+def make_train_step(model: ModelApi, opt_cfg: AdamWConfig,
+                    total_steps: int = 10_000, warmup_steps: int = -1,
+                    bf16_comms: bool = True):
+    """bf16_comms (§Perf iteration 4): differentiate w.r.t. the bf16-cast
+    params (so the gradient reduce-scatter runs in bf16, upcast to f32
+    locally afterwards) and pin the cast before the FSDP weight all-gathers
+    with an optimization barrier (XLA otherwise reorders gather-then-convert
+    and moves f32 bytes over the wire). Master weights/optimizer stay f32."""
+    if warmup_steps < 0:
+        warmup_steps = max(min(100, total_steps // 10), 1)
+
+    from repro.models.layers import cast_tree
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if bf16_comms:
+            cdt = jnp.dtype(model.cfg.compute_dtype)
+            params_c = jax.lax.optimization_barrier(cast_tree(params, cdt))
+            (loss, aux), grads_c = jax.value_and_grad(
+                model.loss, has_aux=True)(params_c, batch)
+            # pin the cross-DP gradient reduction to the bf16 values: the
+            # sharding constraint forces the reduce(-scatter) to the storage
+            # layout BEFORE the local f32 upcast (otherwise XLA widens first
+            # and reduces f32 on the wire)
+            from jax.sharding import NamedSharding
+            from repro.parallel.sharding import current_mesh, shard_params_pspecs
+            mesh = current_mesh()
+            if mesh is not None:
+                specs = shard_params_pspecs(grads_c, mesh)
+                grads_c = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g, NamedSharding(mesh, s)), grads_c, specs)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads_c, params)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+        lr_scale = cosine_schedule(opt_state.step, total_steps, warmup_steps)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg, lr_scale)
+        metrics = {"loss": loss, "tokens": aux["tokens"], **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(model: ModelApi, greedy: bool = True):
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(model: ModelApi):
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    return prefill_step

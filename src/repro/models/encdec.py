@@ -1,0 +1,210 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, enc_ctx, D) supplied by ``input_specs``.
+Encoder: bidirectional self-attention + sinusoidal positions. Decoder:
+causal self-attention + cross-attention to the encoder output. Decode
+caches both the self-attn KV ring and the (static) cross-attn KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import AttnSpec
+from repro.models import layers as L
+from repro.parallel.sharding import constrain_act, gather_fsdp, kv_layout
+
+_BI = AttnSpec(causal=False)
+_CAUSAL = AttnSpec(causal=True)
+
+
+def _init_attn(cfg, key, n_layers, prefix=""):
+    d = cfg.d_model
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def dense(k_, shape, in_axis=0, scale=1.0):
+        w = jax.random.normal(k_, (n_layers,) + shape, jnp.float32)
+        return (w * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    return {
+        prefix + "norm": jnp.zeros((n_layers, d), dt),
+        prefix + "wq": dense(ks[0], (d, h, hd)),
+        prefix + "wk": dense(ks[1], (d, hkv, hd)),
+        prefix + "wv": dense(ks[2], (d, hkv, hd)),
+        prefix + "wo": dense(ks[3], (h, hd, d), scale=np.sqrt(hd) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _init_mlp(cfg, key, n_layers):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def dense(k_, shape, in_axis=0, scale=1.0):
+        w = jax.random.normal(k_, (n_layers,) + shape, jnp.float32)
+        return (w * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    return {
+        "mlp_norm": jnp.zeros((n_layers, d), dt),
+        "w_up": dense(ks[0], (d, ff)),
+        "w_down": dense(ks[1], (ff, d), scale=np.sqrt(ff) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    enc = {**_init_attn(cfg, k1, cfg.n_enc_layers), **_init_mlp(cfg, k2, cfg.n_enc_layers)}
+    dec = {**_init_attn(cfg, k3, cfg.n_layers),
+           **_init_attn(cfg, k4, cfg.n_layers, prefix="cross_"),
+           **_init_mlp(cfg, k5, cfg.n_layers)}
+    return {
+        "embed": L.embed_init(k6, (cfg.vocab_size, cfg.d_model), dt),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _attn_apply(cfg, x, p, prefix, q_pos, kv, kv_pos, spec, kv_valid=None, impl="auto"):
+    h = L.rms_norm(x, p[prefix + "norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(p[prefix + "wq"], (None, "model", None)))
+    if kv is None:  # self-attention
+        k = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(p[prefix + "wk"], (None, "model", None)))
+        v = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(p[prefix + "wv"], (None, "model", None)))
+        if spec.causal:  # rope only on the causal decoder self-attn
+            q = L.apply_rope(q, q_pos, cfg.rope_theta)
+            k = L.apply_rope(k, kv_pos, cfg.rope_theta)
+    else:
+        k, v = kv
+    attn = flash_attention(q, k, v, q_pos, kv_pos, spec, kv_valid=kv_valid, impl=impl)
+    return x + jnp.einsum("bshf,hfd->bsd", attn, gather_fsdp(p[prefix + "wo"], ("model", None, None)))
+
+
+def _mlp_apply(cfg, x, p):
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    ff = L.activate(jnp.einsum("bsd,df->bsf", h, gather_fsdp(p["w_up"], (None, "model"))), cfg.act)
+    return x + jnp.einsum("bsf,fd->bsd", ff, gather_fsdp(p["w_down"], ("model", None)))
+
+
+def encode(cfg: ArchConfig, cparams, frames, impl: str = "auto"):
+    """frames: (B, enc_ctx, D) precomputed frame embeddings (stub frontend)."""
+    b, s, _ = frames.shape
+    pos_tab = jnp.asarray(L.sinusoidal_embedding(s, cfg.d_model))
+    x = frames.astype(jnp.dtype(cfg.compute_dtype)) + pos_tab[None]
+    x = constrain_act(x, ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(xx, lp):
+        xx = _attn_apply(cfg, xx, lp, "", positions, None, positions, _BI, impl=impl)
+        xx = _mlp_apply(cfg, xx, lp)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan_layers(cfg, body_fn, x, cparams["enc_blocks"])
+    return L.rms_norm(x, cparams["enc_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params, tokens, frames, impl: str = "auto"):
+    """Teacher-forced decoder logits: tokens (B, S), frames (B, enc_ctx, D)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    enc_out = encode(cfg, cparams, frames, impl)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1], dtype=jnp.int32),
+                               (b, enc_out.shape[1]))
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+
+    def body(xx, lp):
+        xx = _attn_apply(cfg, xx, lp, "", positions, None, positions, _CAUSAL, impl=impl)
+        ck = jnp.einsum("bsd,dhf->bshf", enc_out, gather_fsdp(lp["cross_wk"], (None, "model", None)))
+        cv = jnp.einsum("bsd,dhf->bshf", enc_out, gather_fsdp(lp["cross_wv"], (None, "model", None)))
+        xx = _attn_apply(cfg, xx, lp, "cross_", positions, (ck, cv), enc_pos, _BI, impl=impl)
+        xx = _mlp_apply(cfg, xx, lp)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan_layers(cfg, body_fn, x, cparams["dec_blocks"])
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, gather_fsdp(cparams["embed"], ("model", None)).T)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Self-attn KV cache + precomputed cross-attn KV (filled by prefill or
+    provided as dry-run inputs)."""
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    nl, ec = cfg.n_layers, cfg.enc_ctx
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((nl, batch, max_len, hkv, hd), dt),
+        "v": jnp.zeros((nl, batch, max_len, hkv, hd), dt),
+        "kv_pos": jnp.full((nl, batch, max_len), -1, jnp.int32),
+        "cross_k": jnp.zeros((nl, batch, ec, hkv, hd), dt),
+        "cross_v": jnp.zeros((nl, batch, ec, hkv, hd), dt),
+    }
+
+
+def prefill_cross(cfg: ArchConfig, params, frames, cache: dict, impl="auto") -> dict:
+    """Compute encoder output once and populate the cross-attn KV cache."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    enc_out = encode(cfg, cparams, frames, impl)
+    ck = jnp.einsum("bsd,ldhf->lbshf", enc_out, cparams["dec_blocks"]["cross_wk"])
+    cv = jnp.einsum("bsd,ldhf->lbshf", enc_out, cparams["dec_blocks"]["cross_wv"])
+    return {**cache, "cross_k": ck.astype(cache["cross_k"].dtype),
+            "cross_v": cv.astype(cache["cross_v"].dtype)}
+
+
+def decode_step(cfg: ArchConfig, params, cache: dict, tokens, impl: str = "auto"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    ec = cfg.enc_ctx
+    enc_pos = jnp.broadcast_to(jnp.arange(ec, dtype=jnp.int32), (b, ec))
+
+    def body(xx, scanned):
+        lp = scanned["p"]
+        kc, vc, pc = scanned["k"], scanned["v"], scanned["kv_pos"]
+        slot = jnp.minimum(pos, kc.shape[1] - 1)
+        h = L.rms_norm(xx, lp["norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(lp["wq"], (None, "model", None)))
+        k_new = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(lp["wk"], (None, "model", None)))
+        v_new = jnp.einsum("bsd,dhf->bshf", h, gather_fsdp(lp["wv"], (None, "model", None)))
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k_new = L.apply_rope(k_new, positions, cfg.rope_theta)
+        if kv_layout(cfg.n_kv_heads) == "seq":
+            q = constrain_act(q, ("batch", None, None, None))
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
+        pc = jax.lax.dynamic_update_slice_in_dim(
+            pc, jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+        attn = flash_attention(q, kc, vc, positions, pc, _CAUSAL,
+                               kv_valid=pc >= 0, impl=impl)
+        xx = xx + jnp.einsum("bshf,hfd->bsd", attn, lp["wo"])
+        xx = _attn_apply(cfg, xx, lp, "cross_", positions,
+                         (scanned["ck"], scanned["cv"]), enc_pos, _BI, impl=impl)
+        xx = _mlp_apply(cfg, xx, lp)
+        return xx, {"k": kc, "v": vc, "kv_pos": pc}
+
+    scanned = {"p": cparams["dec_blocks"], "k": cache["k"], "v": cache["v"],
+               "kv_pos": cache["kv_pos"], "ck": cache["cross_k"], "cv": cache["cross_v"]}
+    x, outs = L.scan_layers(cfg, body, x, scanned)
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, gather_fsdp(cparams["embed"], ("model", None)).T)
+    new_cache = dict(cache)
+    new_cache.update({"pos": pos + 1, **outs})
+    return logits, new_cache

@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one SHARED attention+MLP block
+applied every `hybrid_attn_every` layers.
+
+The scan body is one *group* = k mamba2 layers (unrolled) + the shared
+attention block, so the attention spec stays static and the shared weights
+live in the scan closure (they are identical every application — only the
+KV cache is per-application, carried as a scan xs/ys pair).
+
+Simplification vs the released checkpoints (documented in DESIGN.md): the
+shared block attends over the hidden stream only (no concat with the initial
+embedding, no per-application LoRA deltas).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import AttnSpec
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import _project_qkv
+from repro.parallel.sharding import constrain_act, gather_fsdp, kv_layout
+
+
+def _n_groups(cfg: ArchConfig) -> int:
+    k = cfg.hybrid_attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+def _init_shared_attn(cfg: ArchConfig, key) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def dense(k_, shape, in_axis=0, scale=1.0):
+        w = jax.random.normal(k_, shape, jnp.float32)
+        return (w * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    return {
+        "attn_norm": jnp.zeros((d,), dt),
+        "wq": dense(ks[0], (d, h, hd)),
+        "wk": dense(ks[1], (d, hkv, hd)),
+        "wv": dense(ks[2], (d, hkv, hd)),
+        "wo": dense(ks[3], (h, hd, d), scale=np.sqrt(hd) / np.sqrt(2 * cfg.n_layers)),
+        "mlp_norm": jnp.zeros((d,), dt),
+        "w_gate": dense(ks[4], (d, ff)),
+        "w_up": dense(ks[5], (d, ff)),
+        "w_down": dense(ks[6], (ff, d), scale=np.sqrt(ff) / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_blocks, k_attn, k_head = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dt),
+        "blocks": ssm.init_mamba2_stack(cfg, k_blocks, cfg.n_layers),
+        "shared_attn": _init_shared_attn(cfg, k_attn),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return params
+
+
+def _shared_attn_apply(cfg, x, sp, positions, kv_override=None, impl="auto"):
+    h = L.rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, h, sp, positions)
+    if kv_override is not None:
+        k, v, kv_pos, kv_valid = kv_override
+    else:
+        kv_pos, kv_valid = positions, None
+    spec = AttnSpec(causal=True)
+    attn = flash_attention(q, k, v, positions, kv_pos, spec,
+                           kv_valid=kv_valid, impl=impl)
+    x = x + jnp.einsum("bshf,hfd->bsd", attn, gather_fsdp(sp["wo"], ("model", None, None)))
+    h = L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    ff = L.activate(jnp.einsum("bsd,df->bsf", h, gather_fsdp(sp["w_gate"], (None, "model"))), cfg.act)
+    ff = ff * jnp.einsum("bsd,df->bsf", h, gather_fsdp(sp["w_up"], (None, "model")))
+    x = x + jnp.einsum("bsf,fd->bsd", ff, gather_fsdp(sp["w_down"], ("model", None)))
+    return constrain_act(x, ("batch", "seq", None)), (k, v)
+
+
+def _group_params(cfg, blocks):
+    k = cfg.hybrid_attn_every
+    return jax.tree.map(lambda a: a.reshape((a.shape[0] // k, k) + a.shape[1:]), blocks)
+
+
+def forward(cfg: ArchConfig, params, tokens, impl: str = "auto"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+    x = constrain_act(x, ("batch", None, None))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    groups = _group_params(cfg, cparams["blocks"])
+    sp = cparams["shared_attn"]
+    k = cfg.hybrid_attn_every
+
+    def body(xx, group_p):
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], group_p)
+            xx, _ = ssm.mamba2_block(cfg, xx, lp, impl=impl)
+        xx, _ = _shared_attn_apply(cfg, xx, sp, positions, impl=impl)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan_layers(cfg, body_fn, x, groups)
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    g = _n_groups(cfg)
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    heads = di // cfg.ssm_head_dim
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "conv": jnp.zeros((cfg.n_layers, batch, kc - 1, di), dt),
+        "h": jnp.zeros((cfg.n_layers, batch, heads, n, cfg.ssm_head_dim), jnp.float32),
+        "attn_k": jnp.zeros((g, batch, max_len, hkv, hd), dt),
+        "attn_v": jnp.zeros((g, batch, max_len, hkv, hd), dt),
+        "attn_pos": jnp.full((g, batch, max_len), -1, jnp.int32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache: dict, tokens, impl: str = "auto"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    k = cfg.hybrid_attn_every
+    groups = _group_params(cfg, cparams["blocks"])
+    conv_g = cache["conv"].reshape((_n_groups(cfg), k) + cache["conv"].shape[1:])
+    h_g = cache["h"].reshape((_n_groups(cfg), k) + cache["h"].shape[1:])
+    sp = cparams["shared_attn"]
+
+    def body(xx, scanned):
+        new_conv, new_h = [], []
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], scanned["p"])
+            st = {"conv": scanned["conv"][i], "h": scanned["h"][i]}
+            xx, ns = ssm.mamba2_block(cfg, xx, lp, state=st, impl=impl)
+            new_conv.append(ns["conv"])
+            new_h.append(ns["h"])
+        kc, vc, pc = scanned["ak"], scanned["av"], scanned["ap"]
+        slot = jnp.minimum(pos, kc.shape[1] - 1)
+        hn = L.rms_norm(xx, sp["attn_norm"], cfg.norm_eps)
+        q, k_new, v_new = _project_qkv(cfg, hn, sp, positions)
+        if kv_layout(cfg.n_kv_heads) == "seq":
+            q = constrain_act(q, ("batch", None, None, None))
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
+        pc = jax.lax.dynamic_update_slice_in_dim(
+            pc, jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+        attn = flash_attention(q, kc, vc, positions, pc, AttnSpec(causal=True),
+                               kv_valid=pc >= 0, impl=impl)
+        xx = xx + jnp.einsum("bshf,hfd->bsd", attn, gather_fsdp(sp["wo"], ("model", None, None)))
+        hn = L.rms_norm(xx, sp["mlp_norm"], cfg.norm_eps)
+        ff = L.activate(jnp.einsum("bsd,df->bsf", hn, gather_fsdp(sp["w_gate"], (None, "model"))), cfg.act)
+        ff = ff * jnp.einsum("bsd,df->bsf", hn, gather_fsdp(sp["w_up"], (None, "model")))
+        xx = xx + jnp.einsum("bsf,fd->bsd", ff, gather_fsdp(sp["w_down"], ("model", None)))
+        outs = {"conv": jnp.stack(new_conv), "h": jnp.stack(new_h),
+                "ak": kc, "av": vc, "ap": pc}
+        return xx, outs
+
+    scanned = {"p": groups, "conv": conv_g, "h": h_g,
+               "ak": cache["attn_k"], "av": cache["attn_v"], "ap": cache["attn_pos"]}
+    x, outs = L.scan_layers(cfg, body, x, scanned)
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    new_cache = {
+        "pos": pos + 1,
+        "conv": outs["conv"].reshape(cache["conv"].shape),
+        "h": outs["h"].reshape(cache["h"].shape),
+        "attn_k": outs["ak"], "attn_v": outs["av"], "attn_pos": outs["ap"],
+    }
+    return logits, new_cache

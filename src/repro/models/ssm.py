@@ -1,0 +1,223 @@
+"""Mamba-1 / Mamba-2 blocks and the pure-SSM LM (falcon-mamba).
+
+Decode is O(1) per token (conv tail + recurrent state), which is why the
+ssm/hybrid archs run the long_500k cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels.mamba_scan.ops import mamba1_scan, mamba2_scan
+from repro.models import layers as L
+from repro.parallel.sharding import constrain_act, gather_fsdp
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mamba1_stack(cfg: ArchConfig, key, n_layers: int) -> dict:
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.resolved_dt_rank, cfg.ssm_conv)
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def dense(kk, shape, in_axis=0, scale=1.0):
+        flat = jax.random.normal(kk, (n_layers,) + shape, jnp.float32)
+        return (flat * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (n_layers, di, n)))
+    return {
+        "norm": jnp.zeros((n_layers, d), dt),
+        "in_proj": dense(ks[0], (d, 2 * di)),
+        "conv_w": (jax.random.normal(ks[1], (n_layers, di, k), jnp.float32) / np.sqrt(k)).astype(dt),
+        "conv_b": jnp.zeros((n_layers, di), dt),
+        "x_proj": dense(ks[2], (di, r + 2 * n)),
+        "dt_proj": dense(ks[3], (r, di), scale=r ** 0.5 * 0.1),
+        "dt_bias": jnp.log(jnp.exp(jnp.full((n_layers, di), 0.01)) - 1.0).astype(dt),
+        "a_log": a_init.astype(dt),
+        "ssm_d": jnp.ones((n_layers, di), dt),
+        "out_proj": dense(ks[4], (di, d), scale=1.0 / np.sqrt(2 * cfg.n_layers) * np.sqrt(di)),
+    }
+
+
+def init_mamba2_stack(cfg: ArchConfig, key, n_layers: int) -> dict:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    heads = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def dense(kk, shape, in_axis=0, scale=1.0):
+        flat = jax.random.normal(kk, (n_layers,) + shape, jnp.float32)
+        return (flat * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    return {
+        "norm": jnp.zeros((n_layers, d), dt),
+        # [z | x | B | C | dt] fused input projection (mamba2 layout)
+        "in_proj": dense(ks[0], (d, 2 * di + 2 * n + heads)),
+        "conv_w": (jax.random.normal(ks[1], (n_layers, di, k), jnp.float32) / np.sqrt(k)).astype(dt),
+        "conv_b": jnp.zeros((n_layers, di), dt),
+        "dt_bias": jnp.log(jnp.exp(jnp.full((n_layers, heads), 0.01)) - 1.0).astype(dt),
+        "a_log": jnp.zeros((n_layers, heads), dt),
+        "ssm_d": jnp.ones((n_layers, heads), dt),
+        "gate_norm": jnp.zeros((n_layers, di), dt),
+        "out_proj": dense(ks[2], (di, d), scale=1.0 / np.sqrt(2 * cfg.n_layers) * np.sqrt(di)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (+ stateful tail for decode)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: Optional[jax.Array] = None):
+    """x (B, S, DI), w (DI, K), b (DI,). Returns (y, new_state) where state
+    holds the last K-1 inputs for streaming decode."""
+    bsz, s, di = x.shape
+    k = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((bsz, k - 1, di), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, DI)
+    # depthwise: sum_k x[t - K + 1 + k] * w[:, k]
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xp[:, i:i + s, :] * w[None, None, :, i].reshape(1, 1, di)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros((bsz, 0, di), x.dtype)
+    return y + b[None, None], new_state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def mamba1_block(cfg: ArchConfig, x, p, state=None, impl: str = "auto"):
+    """x (B, S, D). state: None (train) or dict(conv, h) for decode.
+    Returns (out, new_state)."""
+    r, n = cfg.resolved_dt_rank, cfg.ssm_state
+    di = cfg.d_inner
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, gather_fsdp(p["in_proj"], (None, "model")))
+    xz = constrain_act(xz, ("batch", None, "model"))
+    xi, z = jnp.split(xz, [di], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    proj = jnp.einsum("bse,ef->bsf", xi, p["x_proj"])
+    dt_r, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"])
+                         + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = None if state is None else state["h"]
+    y, h_new = mamba1_scan(xi, dt, a, bmat, cmat, h0=h0, chunk=cfg.ssm_chunk,
+                           impl=impl)
+    y = y + xi * p["ssm_d"][None, None]
+    y = y * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", y, gather_fsdp(p["out_proj"], ("model", None)))
+    new_state = None if state is None else {"conv": new_conv, "h": h_new}
+    return constrain_act(out, ("batch", "seq", None)), new_state
+
+
+def mamba2_block(cfg: ArchConfig, x, p, state=None, impl: str = "auto"):
+    """Mamba-2 (SSD) block; heads = d_inner / ssm_head_dim, shared B/C."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    heads = di // cfg.ssm_head_dim
+    ph = cfg.ssm_head_dim
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, gather_fsdp(p["in_proj"], (None, "model")))
+    z, xi, bmat, cmat, dt_in = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    dt = jax.nn.softplus(dt_in + p["dt_bias"][None, None])  # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    bsz, s = xi.shape[:2]
+    xh = xi.reshape(bsz, s, heads, ph)
+    h0 = None if state is None else state["h"]
+    y, h_new = mamba2_scan(xh, dt, a, bmat, cmat, h0=h0, chunk=cfg.ssm_chunk,
+                           impl=impl)
+    y = y + xh * p["ssm_d"][None, None, :, None]  # per-head skip (D term)
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm (mamba2): norm(y) * silu(z)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, gather_fsdp(p["out_proj"], ("model", None)))
+    new_state = None if state is None else {"conv": new_conv, "h": h_new}
+    return constrain_act(out, ("batch", "seq", None)), new_state
+
+
+# ---------------------------------------------------------------------------
+# Pure-SSM LM (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_blocks = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dt),
+        "blocks": init_mamba1_stack(cfg, k_blocks, cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(key, (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return params
+
+
+def forward(cfg: ArchConfig, params, tokens, impl: str = "auto"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+    x = constrain_act(x, ("batch", None, None))
+
+    def body(xx, layer_p):
+        out, _ = mamba1_block(cfg, xx, layer_p, impl=impl)
+        return out, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan_layers(cfg, body_fn, x, cparams["blocks"])
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "conv": jnp.zeros((cfg.n_layers, batch, k - 1, di), dt),
+        "h": jnp.zeros((cfg.n_layers, batch, di, n), jnp.float32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache: dict, tokens, impl: str = "auto"):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = gather_fsdp(cparams["embed"], ("model", None))[tokens].astype(cdt)
+
+    def body(xx, scanned):
+        out, new_state = mamba1_block(
+            cfg, xx, scanned["p"],
+            state={"conv": scanned["conv"], "h": scanned["h"]}, impl=impl)
+        return out, new_state
+
+    x, new_states = L.scan_layers(
+        cfg, body, x, {"p": cparams["blocks"], "conv": cache["conv"], "h": cache["h"]})
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, {"pos": cache["pos"] + 1, "conv": new_states["conv"],
+                    "h": new_states["h"]}

@@ -1,0 +1,293 @@
+"""Decoder-only transformer LM (dense + MoE) with scan-over-layers.
+
+Covers: qwen2.5 (GQA + QKV bias), minitron (relu^2 MLP), granite (MQA),
+gemma2 (alternating local/global attention, logit soft-caps, post-norms,
+embed scaling, tied head), mixtral (top-2 MoE + SWA), and the PaliGemma
+text backbone (prefix-LM mask over stubbed patch embeddings).
+
+Design notes:
+  * All per-layer params are stacked on a leading L dim and consumed by
+    ``lax.scan`` -> O(1-layer) HLO, essential for CPU compile of 64L models.
+  * Alternating local/global archs scan over *pairs* of layers so the
+    sliding-window spec stays static inside the traced body.
+  * Attention projections keep heads as an explicit dim (D, H, hd) so tensor
+    parallelism never reshapes across a sharded dimension.
+  * Decode uses ring-buffer KV caches for windowed layers (W slots) and full
+    caches for global layers; `kv_pos` tracks absolute positions so masks
+    stay correct after wrap-around.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import AttnSpec
+from repro.models import layers as L
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.parallel.sharding import constrain_act, gather_fsdp, kv_layout
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block_stack(cfg: ArchConfig, key, n_layers: int) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    h, hkv, hd = cfg.padded_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 16)
+    dt = jnp.dtype(cfg.param_dtype)
+    out_scale = 1.0 / np.sqrt(2 * cfg.n_layers)
+
+    def dense(k, shape, in_axis=0, scale=1.0):
+        flat = jax.random.normal(k, (n_layers,) + shape, jnp.float32)
+        return (flat * scale / np.sqrt(shape[in_axis])).astype(dt)
+
+    wo = dense(ks[3], (h, hd, d), in_axis=0, scale=out_scale * np.sqrt(hd))
+    if h > cfg.n_heads:  # TP padding: extra heads never contribute
+        wo = wo.at[:, cfg.n_heads:].set(0.0)
+    p = {
+        "attn_norm": jnp.zeros((n_layers, d), dt),
+        "wq": dense(ks[0], (d, h, hd)),
+        "wk": dense(ks[1], (d, hkv, hd)),
+        "wv": dense(ks[2], (d, hkv, hd)),
+        "wo": wo,
+        "mlp_norm": jnp.zeros((n_layers, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_layers, h, hd), dt)
+        p["bk"] = jnp.zeros((n_layers, hkv, hd), dt)
+        p["bv"] = jnp.zeros((n_layers, hkv, hd), dt)
+    if cfg.post_norm:
+        p["attn_post_norm"] = jnp.zeros((n_layers, d), dt)
+        p["mlp_post_norm"] = jnp.zeros((n_layers, d), dt)
+    if cfg.family == "moe":
+        p.update(init_moe_params(cfg, ks[4], n_layers))
+    else:
+        if cfg.act in ("silu", "gelu"):
+            p["w_gate"] = dense(ks[5], (d, ff))
+        p["w_up"] = dense(ks[6], (d, ff))
+        p["w_down"] = dense(ks[7], (ff, d), in_axis=0, scale=out_scale * np.sqrt(ff))
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    params = {
+        "embed": L.embed_init(k_emb, (cfg.vocab_size, cfg.d_model), dt),
+        "blocks": _init_block_stack(cfg, k_blocks, cfg.n_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ArchConfig, prefix_len: int = 0) -> list[AttnSpec]:
+    """Static per-sublayer attention specs; len == layers consumed per scan
+    step (2 for alternating local/global, else 1)."""
+    base = dict(causal=True, softcap=cfg.attn_softcap, prefix_len=prefix_len)
+    if cfg.local_global_alternate:
+        return [AttnSpec(window=cfg.sliding_window, **base), AttnSpec(window=0, **base)]
+    return [AttnSpec(window=cfg.sliding_window, **base)]
+
+
+def _project_qkv(cfg, x, p, positions):
+    q = jnp.einsum("bsd,dhf->bshf", x, gather_fsdp(p["wq"], (None, "model", None)))
+    k = jnp.einsum("bsd,dhf->bshf", x, gather_fsdp(p["wk"], (None, "model", None)))
+    v = jnp.einsum("bsd,dhf->bshf", x, gather_fsdp(p["wv"], (None, "model", None)))
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+        k = k + p["bk"][None, None]
+        v = v + p["bv"][None, None]
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(cfg, x, p):
+    if cfg.family == "moe":
+        return moe_ffn(cfg, x, p)
+    if cfg.act in ("silu", "gelu"):
+        h = L.activate(jnp.einsum("bsd,df->bsf", x, gather_fsdp(p["w_gate"], (None, "model"))), cfg.act)
+        h = h * jnp.einsum("bsd,df->bsf", x, gather_fsdp(p["w_up"], (None, "model")))
+    else:
+        h = L.activate(jnp.einsum("bsd,df->bsf", x, gather_fsdp(p["w_up"], (None, "model"))), cfg.act)
+    h = constrain_act(h, ("batch", None, "model"))
+    return jnp.einsum("bsf,fd->bsd", h, gather_fsdp(p["w_down"], ("model", None)))
+
+
+def block_apply(cfg: ArchConfig, x, p, positions, spec: AttnSpec,
+                kv_override=None, impl: str = "auto"):
+    """One transformer block. kv_override=(k, v, kv_pos, kv_valid) lets the
+    decode path inject cache contents."""
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(cfg, h, p, positions)
+    q = constrain_act(q, ("batch", None, "model", None))
+    if kv_override is not None:
+        k, v, kv_pos, kv_valid = kv_override
+    else:
+        kv_pos, kv_valid = positions, None
+    attn = flash_attention(q, k, v, positions, kv_pos, spec,
+                           kv_valid=kv_valid, impl=impl)
+    attn = jnp.einsum("bshf,hfd->bsd", attn, gather_fsdp(p["wo"], ("model", None, None)))
+    if cfg.post_norm:
+        attn = L.rms_norm(attn, p["attn_post_norm"], cfg.norm_eps)
+    x = x + attn
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    ff = _ffn(cfg, h, p)
+    if cfg.post_norm:
+        ff = L.rms_norm(ff, p["mlp_post_norm"], cfg.norm_eps)
+    x = x + ff
+    return constrain_act(x, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params, tokens, extra_embeds=None):
+    x = gather_fsdp(params["embed"], ("model", None))[tokens].astype(
+        jnp.dtype(cfg.compute_dtype))
+    if extra_embeds is not None:  # vlm: prepend patch embeddings
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    if cfg.scale_embed:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x
+
+
+def _stack_pairs(tree, group: int):
+    return jax.tree.map(
+        lambda a: a.reshape((a.shape[0] // group, group) + a.shape[1:]), tree)
+
+
+def forward(cfg: ArchConfig, params, tokens, extra_embeds=None,
+            prefix_len: int = 0, impl: str = "auto"):
+    """tokens (B, S_text) -> logits (B, S_total, V). extra_embeds (B, P, D)
+    are prepended (PaliGemma patches); prefix_len marks bidirectional kv."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = _embed(cfg, cparams, tokens, extra_embeds)
+    x = constrain_act(x, ("batch", None, None))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    specs = _attn_specs(cfg, prefix_len)
+    group = len(specs)
+    blocks = _stack_pairs(cparams["blocks"], group) if group > 1 else cparams["blocks"]
+
+    def body(carry, layer_p):
+        xx = carry
+        for i, spec in enumerate(specs):
+            lp = jax.tree.map(lambda a: a[i], layer_p) if group > 1 else layer_p
+            xx = block_apply(cfg, xx, lp, positions, spec, impl=impl)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan_layers(cfg, body_fn, x, blocks)
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return constrain_act(logits, ("batch", None, "model"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache, one token per call)
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg: ArchConfig, spec: AttnSpec, max_len: int) -> int:
+    return min(max_len, spec.window) if spec.window > 0 else max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """KV cache pytree. Per spec-group stacks: windowed layers get ring
+    buffers of W slots, global layers full max_len buffers."""
+    dt = dtype or jnp.dtype(cfg.compute_dtype)
+    specs = _attn_specs(cfg)
+    group = len(specs)
+    n = cfg.n_layers // group
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    for i, spec in enumerate(specs):
+        slen = _cache_len(cfg, spec, max_len)
+        cache[f"k{i}"] = jnp.zeros((n, batch, slen, hkv, hd), dt)
+        cache[f"v{i}"] = jnp.zeros((n, batch, slen, hkv, hd), dt)
+        cache[f"kv_pos{i}"] = jnp.full((n, batch, slen), -1, jnp.int32)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache: dict, tokens, impl: str = "auto"):
+    """tokens (B, 1) -> (logits (B, 1, V), updated cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    cparams = L.cast_tree(params, cdt)
+    x = _embed(cfg, cparams, tokens)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    specs = _attn_specs(cfg)
+    group = len(specs)
+    blocks = _stack_pairs(cparams["blocks"], group) if group > 1 else cparams["blocks"]
+
+    def body(xx, scanned):
+        layer_p = scanned["p"]
+        new_kv = {}
+        for i, spec in enumerate(specs):
+            lp = jax.tree.map(lambda a: a[i], layer_p) if group > 1 else layer_p
+            kc, vc, pc = scanned[f"k{i}"], scanned[f"v{i}"], scanned[f"kv_pos{i}"]
+            slot = pos % kc.shape[1] if spec.window > 0 else jnp.minimum(pos, kc.shape[1] - 1)
+            h = L.rms_norm(xx, lp["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = _project_qkv(cfg, h, lp, positions)
+            if kv_layout(cfg.n_kv_heads) == "seq":
+                # seq-sharded cache: replicate q heads so the attention
+                # contraction stays local per seq shard (see specs.py)
+                q = constrain_act(q, ("batch", None, None, None))
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                pc, jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+            attn = flash_attention(q, kc, vc, positions, pc, spec,
+                                   kv_valid=pc >= 0, impl=impl)
+            attn = jnp.einsum("bshf,hfd->bsd", attn, gather_fsdp(lp["wo"], ("model", None, None)))
+            if cfg.post_norm:
+                attn = L.rms_norm(attn, lp["attn_post_norm"], cfg.norm_eps)
+            xx = xx + attn
+            h = L.rms_norm(xx, lp["mlp_norm"], cfg.norm_eps)
+            ff = _ffn(cfg, h, lp)
+            if cfg.post_norm:
+                ff = L.rms_norm(ff, lp["mlp_post_norm"], cfg.norm_eps)
+            xx = xx + ff
+            new_kv[f"k{i}"], new_kv[f"v{i}"], new_kv[f"kv_pos{i}"] = kc, vc, pc
+        return xx, new_kv
+
+    scanned = {"p": blocks}
+    for i in range(group):
+        for key in (f"k{i}", f"v{i}", f"kv_pos{i}"):
+            scanned[key] = cache[key]
+    x, new_kv = L.scan_layers(cfg, body, x, scanned)
+    x = L.rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        head = gather_fsdp(cparams["embed"], ("model", None)).T
+    else:
+        head = gather_fsdp(cparams["head"], (None, "model"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    new_cache = dict(cache)
+    new_cache.update(new_kv)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

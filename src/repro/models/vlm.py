@@ -1,0 +1,33 @@
+"""PaliGemma-style VLM: stubbed SigLIP patch embeddings + gemma decoder.
+
+Per the assignment the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_img_tokens, D) which are prepended to the
+text embeddings with a bidirectional prefix mask (prefix-LM), exactly the
+PaliGemma training setup for the text backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    return transformer.init_params(cfg, key)
+
+
+def forward(cfg: ArchConfig, params, tokens, patches, impl: str = "auto"):
+    """tokens (B, S_text), patches (B, P, D) -> logits (B, P + S_text, V)."""
+    return transformer.forward(cfg, params, tokens, extra_embeds=patches,
+                               prefix_len=cfg.n_img_tokens, impl=impl)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, impl: str = "auto"):
+    # image prefix already sits in the cache (prefilled); plain causal decode
+    return transformer.decode_step(cfg, params, cache, tokens, impl=impl)

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (return multiplicative scales for AdamWConfig.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    return jnp.minimum(1.0, (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, total_steps: int, warmup_steps: int = 0,
+                    final_scale: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_scale + (1 - final_scale) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,76 @@
+"""Cross-pod collectives: int8-compressed gradient all-reduce.
+
+At multi-pod scale the `pod` axis is the slow link (DCN / inter-pod ICI).
+The in-pod reduction stays exact (bf16); across pods each pod exchanges an
+int8-quantized copy of its partial (4x wire reduction vs bf16, 8x vs f32)
+and decompresses locally. With error feedback at the optimizer level
+(repro.optim.compression) the quantization bias vanishes over steps.
+
+Implemented with jax.shard_map over the `pod` axis only — `data`/`model`
+stay under GSPMD, so this composes with any in-pod layout. Usage in a train
+step (multi-pod mesh):
+
+    grads = cross_pod_compressed_allreduce(grads, mesh)   # after in-pod RS
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def _int8_pack(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def cross_pod_compressed_allreduce(tree, mesh: Mesh):
+    """Sum a pytree across the `pod` axis with int8 payloads on the wire.
+
+    Each leaf is assumed to hold this pod's partial contribution (replicated
+    within the pod or sharded over data/model — both compose). Returns the
+    cross-pod sum with the same shardings.
+    """
+    if "pod" not in mesh.axis_names:
+        return tree
+
+    def leaf_sync(x):
+        q, scale = _int8_pack(x)
+        qs = jax.lax.all_gather(q, "pod")  # int8 on the slow link
+        ss = jax.lax.all_gather(scale, "pod")
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+        return jnp.sum(deq, axis=0).astype(x.dtype)
+
+    def sync(t):
+        return jax.tree.map(leaf_sync, t)
+
+    fn = jax.shard_map(
+        sync, mesh=mesh,
+        in_specs=jax.tree.map(lambda _: P("pod"), tree),
+        out_specs=jax.tree.map(lambda _: P(), tree),
+        axis_names={"pod"}, check_vma=False)
+    # Note: in_specs P('pod') treats the leading dim as stacked per-pod
+    # partials; most callers instead hold identical-shape partials per pod —
+    # see cross_pod_sum_partials below for that layout.
+    return fn(tree)
+
+
+def cross_pod_sum_partials(tree, mesh: Mesh):
+    """Variant for the common case: every pod holds a same-shape partial
+    (e.g. its gradient shard); leaves are replicated across `pod` from
+    GSPMD's point of view but numerically different per pod is NOT
+    expressible — so this applies where the caller explicitly maintains
+    per-pod values inside a shard_map region."""
+
+    def leaf_sync(x):
+        q, scale = _int8_pack(x)
+        qs = jax.lax.all_gather(q, "pod")
+        ss = jax.lax.all_gather(scale, "pod")
+        deq = qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * x.ndim)
+        return jnp.sum(deq, axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf_sync, tree)

@@ -1,0 +1,215 @@
+"""Sharding rules: 2-D (FSDP x TP) parameter layout + activation constraints.
+
+Mesh axes:
+  pod    cross-pod data parallelism (multi-pod mesh only; params replicated
+         across pods — optimizer state is NOT sharded over the slow pod axis)
+  data   in-pod data parallelism; also hosts the ZeRO-1 shard of params/opt
+  model  tensor parallelism (heads / ffn / vocab / d_inner)
+
+The paper mapping (DESIGN.md §2): each `data`-axis slice group is one EC
+(ML worker); Cocktail's x/y/z decisions set the per-EC batch composition and
+sample weights consumed by the weighted-psum aggregation (eq. 15).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+# Parallelism style (see EXPERIMENTS.md §Perf):
+#   "tp"    baseline: batch on (pod, data); TP on model; ZeRO over data
+#   "fsdp"  batch over ALL axes; weights fully gathered per layer (ZeRO-3);
+#           no tensor parallelism — trades small weight all-gathers for the
+#           large TP activation all-reduces
+#   "serve" inference layout: weights TP-sharded on model, REPLICATED over
+#           data (no per-token FSDP gathers); decode/prefill only
+_STYLE: str = "tp"
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], style: str = "tp"):
+    """Install `mesh` (+ parallelism style) for model-code constraints."""
+    global _MESH, _STYLE
+    prev, prev_style = _MESH, _STYLE
+    _MESH, _STYLE = mesh, style
+    try:
+        yield mesh
+    finally:
+        _MESH, _STYLE = prev, prev_style
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def current_style() -> str:
+    return _STYLE
+
+
+def batch_axes(mesh: Mesh):
+    if _STYLE == "fsdp":
+        return tuple(mesh.axis_names)  # batch over every axis
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def constrain_act(x: jax.Array, spec: tuple) -> jax.Array:
+    """Constrain an activation. `spec` entries: 'batch' -> DP axes,
+    'model' -> TP axis, 'seq' -> TP axis under the tp_sp style (sequence-
+    sharded remat carries, Korthikanti-style sequence parallelism) else
+    unsharded, None -> unsharded. No-op without a mesh context."""
+    if _MESH is None:
+        return x
+
+    def resolve(entry):
+        if entry == "batch":
+            return batch_axes(_MESH)
+        if entry == "seq":
+            return "model" if _STYLE == "tp_sp" else None
+        if entry == "model" and _STYLE == "fsdp":
+            return None  # model axis belongs to the batch under fsdp
+        return entry
+
+    resolved = tuple(resolve(e) for e in spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, P(*resolved)))
+
+
+def kv_layout(n_kv_heads: int) -> str:
+    """Decode KV-cache layout policy (must mirror launch/specs.cache_pspecs):
+    'heads' when the kv head count shards exactly on the model axis, else
+    'seq' (sequence-sharded cache + model-replicated q)."""
+    if _MESH is None:
+        return "heads"
+    msz = _MESH.shape.get("model", 1)
+    return "heads" if (n_kv_heads % msz == 0 and n_kv_heads >= msz) else "seq"
+
+
+def dp_group_count(n_items: int) -> int:
+    """Static DP shard count for shard-local batch grouping (MoE dispatch):
+    the number of (pod x data) shards if it divides n_items, else 1."""
+    if _MESH is None:
+        return 1
+    dp = 1
+    for a in batch_axes(_MESH):
+        dp *= _MESH.shape.get(a, 1)
+    return dp if (n_items % dp == 0 and n_items >= dp) else 1
+
+
+def gather_fsdp(w: jax.Array, spec: tuple) -> jax.Array:
+    """FSDP weight gather: constrain a (ZeRO-sharded) weight to its TP-only
+    layout at the use site, so the partitioner inserts one small bf16
+    all-gather over the data axis instead of all-reducing the (much larger)
+    activation partial-sums of a matmul with a sharded contracting dim.
+
+    `spec` names only the TP placement, e.g. (None, 'model', None) for a
+    (D, H, hd) projection. §Perf iteration 1 — see EXPERIMENTS.md.
+    """
+    if _MESH is None:
+        return w
+    if _STYLE == "fsdp":  # ZeRO-3: gather the whole weight at use
+        spec = tuple(None for _ in spec)
+    # tp_sp behaves like tp for weights
+    if any(d % _MESH.shape.get("model", 1) for d, s in zip(w.shape, spec) if s == "model"):
+        spec = tuple(None for _ in spec)  # not TP-divisible: fully gather
+    # pin the (bf16) cast BEFORE the gather: without the barrier XLA commutes
+    # convert/all-gather and moves f32 master bytes over the wire (2x)
+    w = jax.lax.optimization_barrier(w)
+    return jax.lax.with_sharding_constraint(w, NamedSharding(_MESH, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+# Leaf-name -> partition spec for the *trailing* (non-stacked) dims.
+# 'F' = fsdp/ZeRO axis ('data'), 'T' = tensor axis ('model').
+_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)embed$", ("T", "F")),  # (V, D): vocab on model
+    (r"(^|/)pos_embed$", (None, None)),
+    (r"(^|/)(cross_)?w[qkv]$", ("F", "T", None)),  # (D, H, hd): heads on model
+    (r"(^|/)b[qkv]$", ("T", None)),  # (H, hd)
+    (r"(^|/)(cross_)?wo$", ("T", None, "F")),  # (H, hd, D)
+    (r"(^|/)w_(gate|up)$", ("F", "T")),  # (D, FF)
+    (r"(^|/)w_down$", ("T", "F")),  # (FF, D)
+    (r"(^|/)router$", ("F", None)),  # (D, E)
+    (r"(^|/)we_(gate|up)$", (None, "F", "T")),  # (E, D, FF)
+    (r"(^|/)we_down$", (None, "T", "F")),  # (E, FF, D)
+    (r"(^|/)in_proj$", ("F", "T")),  # (D, ...) ssm
+    (r"(^|/)conv_w$", ("T", None)),  # (DI, K)
+    (r"(^|/)conv_b$", ("T",)),
+    (r"(^|/)x_proj$", ("T", None)),  # (DI, R+2N)
+    (r"(^|/)dt_proj$", (None, "T")),  # (R, DI)
+    (r"(^|/)dt_bias$", ("T",)),
+    (r"(^|/)a_log$", ("T", None)),  # (DI, N) or (H,) mamba2
+    (r"(^|/)ssm_d$", ("T",)),
+    (r"(^|/)out_proj$", ("T", "F")),  # (DI, D)
+    (r"(^|/).*norm.*$", None),  # any norm scale/bias: replicated
+    (r"(^|/)head$", ("F", "T")),  # (D, V) lm head
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Resolve the PartitionSpec for one parameter.
+
+    Stacked layer params (path containing 'blocks') get a leading None for
+    the layer dim. Dims whose size is not divisible by the assigned mesh axis
+    still shard (GSPMD pads), except size-1 dims which are left unsharded.
+    """
+    stacked = "blocks" in path or "enc_blocks" in path or "dec_blocks" in path
+    trailing = shape[1:] if stacked else shape
+    spec: Optional[tuple] = None
+    leaf = path
+    for pat, rule in _RULES:
+        if re.search(pat, leaf):
+            spec = rule
+            break
+    if spec is None:
+        spec = (None,) * len(trailing)
+    if spec is not None and len(spec) != len(trailing):
+        # rank mismatch (e.g. bias picked up a matrix rule): replicate
+        spec = (None,) * len(trailing)
+
+    ax = {"F": "data", "T": "model", None: None}
+    if _STYLE == "serve":  # replicate over data: no FSDP gathers per token
+        ax = {"F": None, "T": "model", None: None}
+    resolved = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, s in zip(trailing, spec):
+        name = ax[s]
+        if name is not None and dim % axis_sizes.get(name, 1) != 0:
+            name = None  # jit in_shardings require exact divisibility
+        resolved.append(name)
+    if stacked:
+        resolved = [None] + resolved
+    return P(*resolved)
+
+
+def shard_params_pspecs(params, mesh: Mesh):
+    """pytree of PartitionSpec matching `params`."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(_path_str(path), leaf.shape, mesh), params)
+
+
+def shard_params(params, mesh: Mesh):
+    """Device-put params according to the rule table (host-side)."""
+    specs = shard_params_pspecs(params, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)

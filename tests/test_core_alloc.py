@@ -1,0 +1,197 @@
+"""Training-allocation solvers: feasibility + optimality properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import training_alloc as ta
+
+TOL = 1e-3
+
+
+def _feasible_solo(x, r, budget):
+    x = np.asarray(x)
+    assert (x >= -1e-6).all()
+    assert (x <= np.asarray(r) + 1e-4).all()
+    assert x.sum() <= budget * (1 + 1e-4) + 1e-4
+
+
+class TestSoloWaterfill:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_feasible_and_waterlevel_structure(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 12))
+        beta = rng.uniform(-1.0, 5.0, n)
+        r = rng.uniform(0.0, 50.0, n)
+        budget = float(rng.uniform(0.0, 120.0))
+        x, val = ta.solo_waterfill(jnp.asarray(beta, jnp.float32),
+                                   jnp.asarray(r, jnp.float32),
+                                   jnp.asarray(budget, jnp.float32))
+        x = np.asarray(x)
+        _feasible_solo(x, r, budget)
+        # inactive sources get nothing
+        assert (x[(beta <= 0) | (r <= 1e-9)] == 0).all()
+        active = (beta > 0) & (r > 1e-9) & (x > 1e-6)
+        if active.sum() >= 2:
+            # water-level structure: every active x is either at its cap or at
+            # the common level
+            free = active & (x < r - 1e-4)
+            if free.sum() >= 2:
+                lv = x[free]
+                assert np.ptp(lv) <= 1e-2 * max(lv.max(), 1.0)
+
+    def test_beats_random_feasible(self):
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            n = int(rng.integers(2, 8))
+            beta = rng.uniform(0.1, 5.0, n)
+            r = rng.uniform(1.0, 30.0, n)
+            budget = float(rng.uniform(5.0, 60.0))
+            x, val = ta.solo_waterfill(jnp.asarray(beta, jnp.float32),
+                                       jnp.asarray(r, jnp.float32),
+                                       jnp.asarray(budget, jnp.float32))
+            val = float(val)
+            for _ in range(30):
+                # random feasible interior point allocating to all sources
+                u = rng.uniform(0.2, 1.0, n)
+                cand = np.minimum(r, u * budget / u.sum())
+                if cand.sum() > budget:
+                    cand *= budget / cand.sum()
+                cand = np.maximum(cand, 1e-6)
+                v = np.sum(np.log(beta * np.minimum(cand, r)))
+                assert val >= v - TOL * max(1.0, abs(v))
+
+    def test_exhausts_budget_when_binding(self):
+        beta = jnp.asarray([1.0, 2.0, 3.0])
+        r = jnp.asarray([10.0, 10.0, 10.0])
+        x, _ = ta.solo_waterfill(beta, r, jnp.asarray(6.0))
+        assert float(jnp.sum(x)) == pytest.approx(6.0, rel=1e-4)
+        np.testing.assert_allclose(np.asarray(x), [2.0, 2.0, 2.0], rtol=1e-4)
+
+    def test_caps_respected_when_slack(self):
+        beta = jnp.asarray([1.0, 1.0])
+        r = jnp.asarray([3.0, 5.0])
+        x, _ = ta.solo_waterfill(beta, r, jnp.asarray(100.0))
+        np.testing.assert_allclose(np.asarray(x), [3.0, 5.0], rtol=1e-5)
+
+
+def _pair_instance(rng, n):
+    return dict(
+        b_j=rng.uniform(0.1, 4.0, n), g_kj=rng.uniform(0.05, 4.0, n),
+        b_k=rng.uniform(0.1, 4.0, n), g_jk=rng.uniform(0.05, 4.0, n),
+        r_j=rng.uniform(0.5, 30.0, n), r_k=rng.uniform(0.5, 30.0, n),
+        budget_j=float(rng.uniform(5.0, 80.0)),
+        budget_k=float(rng.uniform(5.0, 80.0)),
+        link=float(rng.uniform(1.0, 40.0)),
+    )
+
+
+def _check_pair_feasible(pa, inst):
+    x_j, x_k = np.asarray(pa.x_j), np.asarray(pa.x_k)
+    y_jk, y_kj = np.asarray(pa.y_jk), np.asarray(pa.y_kj)
+    for v in (x_j, x_k, y_jk, y_kj):
+        assert (v >= -1e-6).all()
+    assert (x_j + y_jk <= inst["r_j"] * (1 + 1e-4) + 1e-4).all()  # (13) queue j
+    assert (x_k + y_kj <= inst["r_k"] * (1 + 1e-4) + 1e-4).all()  # (13) queue k
+    assert (x_j + y_kj).sum() <= inst["budget_j"] * (1 + 1e-4) + 1e-3  # (8) at j
+    assert (x_k + y_jk).sum() <= inst["budget_k"] * (1 + 1e-4) + 1e-3  # (8) at k
+    assert (y_jk + y_kj).sum() <= inst["link"] * (1 + 1e-4) + 1e-3  # (6)
+
+
+class TestPairAllocate:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_feasible(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 10))
+        inst = _pair_instance(rng, n)
+        pa = ta.pair_allocate(**{k: jnp.asarray(v, jnp.float32) for k, v in inst.items()})
+        _check_pair_feasible(pa, inst)
+
+    def test_at_least_solo_value(self):
+        """Pairing with borrowing must not be worse than independent solo
+        training (y=0 is feasible for problem (21))."""
+        rng = np.random.default_rng(11)
+        worse = 0
+        for _ in range(15):
+            n = int(rng.integers(2, 8))
+            inst = _pair_instance(rng, n)
+            j = {k: jnp.asarray(v, jnp.float32) for k, v in inst.items()}
+            pa = ta.pair_allocate(**j, iters=120, sweeps=6)
+            _, v_j = ta.solo_waterfill(j["b_j"], j["r_j"], j["budget_j"])
+            _, v_k = ta.solo_waterfill(j["b_k"], j["r_k"], j["budget_k"])
+            if float(pa.value) < float(v_j + v_k) - 0.05 * abs(float(v_j + v_k)) - 0.1:
+                worse += 1
+        assert worse <= 2  # fixed-iteration solver: allow rare small shortfalls
+
+    def test_close_to_longrun_oracle(self):
+        rng = np.random.default_rng(13)
+        for _ in range(5):
+            n = int(rng.integers(2, 6))
+            inst = {k: jnp.asarray(v, jnp.float32) for k, v in _pair_instance(rng, n).items()}
+            fast = ta.pair_allocate(**inst, iters=60, sweeps=4)
+            slow = ta.pair_allocate(**inst, iters=1500, sweeps=10)
+            assert float(fast.value) >= float(slow.value) - 0.1 * abs(float(slow.value)) - 0.5
+
+
+class TestLinear:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_linear_solo_exact_fractional_knapsack(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 10))
+        beta = rng.uniform(-1.0, 5.0, n)
+        r = rng.uniform(0.0, 20.0, n)
+        budget = float(rng.uniform(0.0, 60.0))
+        x, val = ta.linear_solo(jnp.asarray(beta, jnp.float32),
+                                jnp.asarray(r, jnp.float32),
+                                jnp.asarray(budget, jnp.float32))
+        _feasible_solo(np.asarray(x), r, budget)
+        # LP optimum check: value of greedy == LP optimum for 1 resource + caps
+        order = np.argsort(-beta)
+        rem, ref = budget, 0.0
+        for i in order:
+            if beta[i] <= 0 or rem <= 0:
+                continue
+            amt = min(r[i], rem)
+            ref += beta[i] * amt
+            rem -= amt
+        assert float(val) == pytest.approx(ref, rel=1e-4, abs=1e-3)
+
+    def test_linear_pair_feasible(self):
+        rng = np.random.default_rng(17)
+        for _ in range(10):
+            n = int(rng.integers(1, 8))
+            inst = _pair_instance(rng, n)
+            pa = ta.linear_pair(**{k: jnp.asarray(v, jnp.float32) for k, v in inst.items()})
+            _check_pair_feasible(pa, inst)
+
+
+class TestFullAllocate:
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_feasible(self, seed):
+        rng = np.random.default_rng(seed)
+        n, m = int(rng.integers(2, 6)), int(rng.integers(2, 5))
+        beta = rng.uniform(-0.5, 3.0, (n, m))
+        gamma = rng.uniform(-0.5, 3.0, (n, m, m))
+        r = rng.uniform(0.5, 20.0, (n, m))
+        budgets = rng.uniform(5.0, 50.0, m)
+        links = rng.uniform(1.0, 30.0, (m, m))
+        links = (links + links.T) / 2
+        np.fill_diagonal(links, 0.0)
+        x, y, val = ta.full_allocate(
+            jnp.asarray(beta, jnp.float32), jnp.asarray(gamma, jnp.float32),
+            jnp.asarray(r, jnp.float32), jnp.asarray(budgets, jnp.float32),
+            jnp.asarray(links, jnp.float32))
+        x, y = np.asarray(x), np.asarray(y)
+        assert (x >= -1e-6).all() and (y >= -1e-6).all()
+        assert (y[:, np.arange(m), np.arange(m)] <= 1e-6).all()  # no self-offload
+        dep = x + y.sum(axis=2)
+        assert (dep <= r * (1 + 1e-3) + 1e-3).all()  # (13)
+        trained = x.sum(axis=0) + y.sum(axis=(0, 1))
+        assert (trained <= budgets * (1 + 1e-3) + 1e-2).all()  # (8)
+        flow = y.sum(axis=0)
+        assert ((flow + flow.T) <= links * (1 + 1e-3) + 1e-2 + np.eye(m) * 1e9).all()  # (6)

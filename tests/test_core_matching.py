@@ -1,0 +1,141 @@
+"""Matching layer: greedy production paths vs the exact Thm.1/Thm.2 oracles,
+plus brute-force validation of the oracles themselves on tiny instances."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import matching, oracle
+
+
+def _rand_logw(rng, n, m, lo=0.2, hi=4.0):
+    # weights > 1 so logs are positive and objective ratios are meaningful
+    return np.log(rng.uniform(np.e ** lo, np.e ** hi, size=(n, m)))
+
+
+def brute_force_collection(logw):
+    """Enumerate every CU->EC (or none) assignment; return best objective."""
+    n, m = logw.shape
+    best = 0.0
+    for assign in itertools.product(range(m + 1), repeat=n):
+        alpha = np.zeros((n, m))
+        for i, a in enumerate(assign):
+            if a > 0:
+                alpha[i, a - 1] = 1.0
+        best = max(best, oracle.collection_objective(logw, alpha))
+    return best
+
+
+class TestCollection:
+    def test_oracle_matches_bruteforce(self):
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            logw = _rand_logw(rng, 4, 2)
+            alpha, theta = oracle.exact_collection(logw)
+            obj = oracle.collection_objective(logw, np.asarray(alpha))
+            assert obj == pytest.approx(brute_force_collection(logw), rel=1e-6)
+
+    def test_greedy_feasible_and_half_approx(self):
+        rng = np.random.default_rng(1)
+        for trial in range(8):
+            n, m = rng.integers(3, 9), rng.integers(2, 4)
+            logw = _rand_logw(rng, int(n), int(m))
+            alpha, theta = matching.greedy_collection(jnp.asarray(logw))
+            alpha, theta = np.asarray(alpha), np.asarray(theta)
+            # constraint (2): each CU at most one EC
+            assert (alpha.sum(axis=1) <= 1 + 1e-6).all()
+            # constraint (3): per-EC durations sum to <= 1
+            assert (theta.sum(axis=0) <= 1 + 1e-6).all()
+            # theta = 1/n_j on connections
+            cnt = alpha.sum(axis=0)
+            for j in range(int(m)):
+                if cnt[j] > 0:
+                    np.testing.assert_allclose(
+                        theta[alpha[:, j] > 0, j], 1.0 / cnt[j], rtol=1e-5)
+            g_obj = oracle.collection_objective(logw, alpha)
+            e_alpha, _ = oracle.exact_collection(logw)
+            e_obj = oracle.collection_objective(logw, np.asarray(e_alpha))
+            assert e_obj >= g_obj - 1e-6
+            if e_obj > 0:
+                assert g_obj >= 0.5 * e_obj - 1e-6
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_greedy_never_negative_marginal(self, seed):
+        """Greedy stops at non-positive marginal gain: removing any single CU
+        from its EC never increases the objective."""
+        rng = np.random.default_rng(seed)
+        logw = np.log(rng.uniform(0.2, 40.0, size=(6, 3)))
+        alpha = np.asarray(matching.greedy_collection(jnp.asarray(logw))[0])
+        base = oracle.collection_objective(logw, alpha)
+        for i in range(6):
+            if alpha[i].sum() > 0:
+                a2 = alpha.copy()
+                a2[i] = 0
+                assert oracle.collection_objective(logw, a2) <= base + 1e-6
+
+
+def brute_force_pairing(solo, pair):
+    """Best total value over all EC partitions into pairs + singletons,
+    where singletons may also opt out (train nothing, value 0)."""
+    m = len(solo)
+
+    def rec(avail):
+        if not avail:
+            return 0.0
+        j, rest = avail[0], avail[1:]
+        best = rec(rest) + max(solo[j], 0.0)
+        for k in rest:
+            rem = tuple(u for u in rest if u != k)
+            v = rec(rem) + pair[j, k]
+            best = max(best, v)
+        best = max(best, rec(rest))  # j opts out entirely
+        return best
+
+    return rec(tuple(range(m)))
+
+
+class TestPairing:
+    def test_oracle_matches_bruteforce(self):
+        rng = np.random.default_rng(2)
+        for _ in range(6):
+            m = int(rng.integers(2, 6))
+            solo = rng.normal(2.0, 2.0, size=m)
+            pair = rng.normal(3.0, 3.0, size=(m, m))
+            pair = (pair + pair.T) / 2
+            np.fill_diagonal(pair, 0.0)
+            match = np.asarray(oracle.exact_pairing(solo, pair))
+            val = (np.diagonal(match) * solo).sum() + (np.triu(match, 1) * pair).sum()
+            assert val == pytest.approx(brute_force_pairing(solo, pair), rel=1e-6, abs=1e-6)
+
+    def test_greedy_feasible_and_half_approx(self):
+        rng = np.random.default_rng(3)
+        for _ in range(10):
+            m = int(rng.integers(2, 8))
+            solo = rng.uniform(0.0, 5.0, size=m)
+            pair = rng.uniform(0.0, 10.0, size=(m, m))
+            pair = (pair + pair.T) / 2
+            match = np.asarray(matching.greedy_pairing(jnp.asarray(solo), jnp.asarray(pair)))
+            # symmetric, each EC covered at most once
+            np.testing.assert_allclose(match, match.T)
+            assert (match.sum(axis=1) <= 1 + 1e-6).all()
+            g_val = (np.diagonal(match) * solo).sum() + (np.triu(match, 1) * pair).sum()
+            e_val = brute_force_pairing(solo, pair)
+            assert g_val >= 0.5 * e_val - 1e-6
+
+
+class TestAssignment:
+    def test_greedy_disjoint_and_half(self):
+        rng = np.random.default_rng(4)
+        for _ in range(10):
+            n, m = int(rng.integers(2, 10)), int(rng.integers(2, 5))
+            w = rng.uniform(0.1, 10.0, size=(n, m))
+            alpha = np.asarray(matching.greedy_assignment(jnp.asarray(w)))
+            assert (alpha.sum(axis=1) <= 1 + 1e-6).all()
+            assert (alpha.sum(axis=0) <= 1 + 1e-6).all()
+            e_alpha = np.asarray(oracle.exact_assignment(w))
+            assert (alpha * w).sum() >= 0.5 * (e_alpha * w).sum() - 1e-6

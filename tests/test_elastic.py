@@ -1,0 +1,38 @@
+"""Elastic scaling: a checkpoint written while training on a 4-device mesh
+restores and continues on an 8-device mesh (different DP width), preserving
+the learning state. Stages run in subprocesses so each gets its own fake
+device count."""
+import pathlib
+import subprocess
+import sys
+
+STAGE = r"""
+import os, sys
+n_dev, ckpt_dir, steps = sys.argv[1], sys.argv[2], int(sys.argv[3])
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+import json
+from repro.launch import train
+summary = train.main([
+    "--arch", "whisper-base", "--reduced", "--steps", str(steps),
+    "--batch", "8", "--seq", "32", "--checkpoint-dir", ckpt_dir,
+    "--checkpoint-every", "5", "--lr", "1e-3", "--log-every", "100",
+])
+print("SUMMARY:" + json.dumps(summary))
+"""
+
+
+def _stage(n_dev, ckpt, steps):
+    r = subprocess.run([sys.executable, "-c", STAGE, str(n_dev), str(ckpt), str(steps)],
+                       capture_output=True, text=True, timeout=1200,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+def test_scale_up_mid_training(tmp_path):
+    ckpt = tmp_path / "ck"
+    _stage(4, ckpt, 10)  # train on 4 devices, snapshot at step 10
+    out = _stage(8, ckpt, 20)  # resume the same run on 8 devices
+    assert "resumed from step 10" in out
+    from repro.checkpoint import latest_step
+    assert latest_step(ckpt) == 20

@@ -1,0 +1,168 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps + the chunked jnp production paths vs the exact references."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import AttnSpec, attention_ref
+from repro.kernels.mamba_scan import ops as ms_ops
+from repro.kernels.mamba_scan.kernel import mamba1_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba1_scan_ref, mamba2_scan_ref
+from repro.kernels.matching.kernel import greedy_assignment_pallas
+from repro.kernels.matching.ref import greedy_assignment_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _qkv(b, sq, skv, h, hkv, hd, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, hd)), dtype)
+    qp = jnp.broadcast_to(jnp.arange(skv - sq, skv, dtype=jnp.int32), (b, sq))
+    kp = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32), (b, skv))
+    return q, k, v, qp, kp
+
+
+ATTN_CASES = [
+    (2, 128, 128, 4, 2, 64, AttnSpec(causal=True)),
+    (1, 256, 256, 8, 8, 32, AttnSpec(causal=True, window=64)),
+    (2, 128, 128, 4, 1, 64, AttnSpec(causal=True, softcap=30.0)),
+    (1, 64, 192, 4, 2, 32, AttnSpec(causal=False)),
+    (1, 128, 128, 2, 2, 16, AttnSpec(causal=True, prefix_len=32)),
+]
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("case", ATTN_CASES, ids=str)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_pallas_matches_ref(self, case, dtype):
+        b, sq, skv, h, hkv, hd, spec = case
+        q, k, v, qp, kp = _qkv(b, sq, skv, h, hkv, hd, dtype)
+        ref = attention_ref(q, k, v, qp, kp, spec)
+        out = flash_attention_pallas(q, k, v, qp, kp, spec, interpret=True,
+                                     block_q=64, block_kv=64)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(ref, np.float32),
+                                   np.asarray(out, np.float32),
+                                   rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("case", ATTN_CASES, ids=str)
+    def test_chunked_matches_ref(self, case):
+        b, sq, skv, h, hkv, hd, spec = case
+        q, k, v, qp, kp = _qkv(b, sq, skv, h, hkv, hd, jnp.float32)
+        ref = attention_ref(q, k, v, qp, kp, spec)
+        out = fa_ops.attention_chunked(q, k, v, qp, kp, spec,
+                                       q_chunk=32, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_chunked_with_kv_valid(self):
+        b, sq, skv, h, hkv, hd = 2, 1, 128, 4, 2, 32
+        q, k, v, qp, kp = _qkv(b, sq, skv, h, hkv, hd, jnp.float32)
+        valid = jnp.asarray(RNG.random((b, skv)) > 0.3)
+        spec = AttnSpec(causal=True)
+        ref = attention_ref(q, k, v, qp, kp, spec, kv_valid=valid)
+        out = fa_ops.attention_chunked(q, k, v, qp, kp, spec, kv_valid=valid,
+                                       q_chunk=1, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_decode_grouped_path(self):
+        b, skv, h, hkv, hd = 2, 96, 8, 2, 32
+        q, k, v, qp, kp = _qkv(b, 1, skv, h, hkv, hd, jnp.float32)
+        spec = AttnSpec(causal=True)
+        ref = attention_ref(q, k, v, qp, kp, spec)
+        out = fa_ops.flash_attention(q, k, v, qp, kp, spec, impl="chunked")
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_pallas_grad_matches_ref(self):
+        b, s, h, hkv, hd = 1, 64, 4, 2, 32
+        q, k, v, qp, kp = _qkv(b, s, s, h, hkv, hd, jnp.float32)
+        spec = AttnSpec(causal=True)
+
+        def loss_p(q, k, v):
+            return jnp.sum(flash_attention_pallas(q, k, v, qp, kp, spec,
+                                                  interpret=True,
+                                                  block_q=32, block_kv=32) ** 2)
+
+        def loss_r(q, k, v):
+            return jnp.sum(attention_ref(q, k, v, qp, kp, spec) ** 2)
+
+        gp = jax.grad(loss_p, argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+        for a, bb in zip(gp, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(bb),
+                                       rtol=1e-3, atol=1e-3)
+
+
+def _mamba1_inputs(b, s, di, n, dtype=jnp.float32):
+    x = jnp.asarray(RNG.normal(size=(b, s, di)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, di)), dtype)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(di, n)), jnp.float32)
+    bm = jnp.asarray(RNG.normal(size=(b, s, n)), dtype)
+    cm = jnp.asarray(RNG.normal(size=(b, s, n)), dtype)
+    return x, dt, a, bm, cm
+
+
+class TestMambaScan:
+    @pytest.mark.parametrize("shape", [(1, 64, 32, 8), (2, 128, 64, 16),
+                                       (1, 96, 48, 4)])
+    def test_chunked_matches_ref_m1(self, shape):
+        b, s, di, n = shape
+        x, dt, a, bm, cm = _mamba1_inputs(b, s, di, n)
+        y_ref, h_ref = mamba1_scan_ref(x, dt, a, bm, cm)
+        y, h = ms_ops.mamba1_scan_chunked(x, dt, a, bm, cm, chunk=32)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("shape", [(1, 64, 32, 8), (2, 128, 64, 16)])
+    def test_pallas_matches_ref_m1(self, shape):
+        b, s, di, n = shape
+        x, dt, a, bm, cm = _mamba1_inputs(b, s, di, n)
+        y_ref, h_ref = mamba1_scan_ref(x, dt, a, bm, cm)
+        y, h = mamba1_scan_pallas(x, dt, a, bm, cm, chunk=32, block_d=16,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h), rtol=2e-4, atol=2e-4)
+
+    def test_pallas_with_initial_state(self):
+        b, s, di, n = 1, 32, 16, 8
+        x, dt, a, bm, cm = _mamba1_inputs(b, s, di, n)
+        h0 = jnp.asarray(RNG.normal(size=(b, di, n)), jnp.float32)
+        y_ref, h_ref = mamba1_scan_ref(x, dt, a, bm, cm, h0=h0)
+        y, h = mamba1_scan_pallas(x, dt, a, bm, cm, h0=h0, chunk=16,
+                                  block_d=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("shape", [(1, 64, 4, 16, 8), (2, 128, 8, 32, 16)])
+    def test_chunked_matches_ref_m2(self, shape):
+        b, s, h, p, n = shape
+        x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(b, s, h)), jnp.float32)
+        a = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+        bm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+        cm = jnp.asarray(RNG.normal(size=(b, s, n)), jnp.float32)
+        y_ref, h_ref = mamba2_scan_ref(x, dt, a, bm, cm)
+        y, hh = ms_ops.mamba2_scan_chunked(x, dt, a, bm, cm, chunk=32)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), rtol=3e-4, atol=3e-4)
+        np.testing.assert_allclose(np.asarray(h_ref), np.asarray(hh), rtol=3e-4, atol=3e-4)
+
+
+class TestMatchingKernel:
+    @pytest.mark.parametrize("shape", [(16, 4), (64, 8), (256, 16)])
+    def test_pallas_matches_ref(self, shape):
+        n, m = shape
+        w = jnp.asarray(RNG.uniform(-1.0, 10.0, size=(n, m)), jnp.float32)
+        ref = greedy_assignment_ref(w)
+        out = greedy_assignment_pallas(w, interpret=True)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out))
+
+    def test_all_negative_selects_nothing(self):
+        w = -jnp.ones((32, 4))
+        out = greedy_assignment_pallas(w, interpret=True)
+        assert float(jnp.sum(out)) == 0.0

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced config, one forward + one grad step
++ a few decode steps on CPU; assert shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_configs, reduced
+from repro.models import build_model
+
+ARCHS = sorted(all_configs())
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 4)
+    tokens = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tokens,
+        "labels": jnp.roll(tokens, -1, axis=1),
+        "weights": jnp.asarray([1.0, 0.5], jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(ks[1], (B, cfg.n_img_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (B, cfg.enc_ctx, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(all_configs()[arch])
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    logits = jax.jit(model.forward)(params, batch)
+    s_total = S + (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, s_total, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    (loss, aux), grads = jax.jit(jax.value_and_grad(model.loss, has_aux=True))(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in flat)))
+    assert gnorm > 0, "no gradient signal"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps(arch):
+    cfg = reduced(all_configs()[arch])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, max_len=8)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        frames = jax.random.normal(jax.random.PRNGKey(2), (B, cfg.enc_ctx, cfg.d_model))
+        cache = encdec.prefill_cross(cfg, params, frames, cache)
+    step = jax.jit(model.decode_step)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for t in range(4):
+        logits, cache = step(params, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits[:, :, :], axis=-1).astype(jnp.int32)
+        assert int(cache["pos"]) == t + 1
+
+
+def test_decode_matches_forward_dense():
+    """Teacher-forced decode must reproduce full-seq forward logits (dense)."""
+    cfg = reduced(all_configs()["qwen2.5-32b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0, cfg.vocab_size)
+    full = model.forward(params, {"tokens": tokens})
+    cache = model.init_cache(B, max_len=8)
+    outs = []
+    for t in range(6):
+        logits, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_ssm():
+    cfg = reduced(all_configs()["falcon-mamba-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0, cfg.vocab_size)
+    full = model.forward(params, {"tokens": tokens})
+    cache = model.init_cache(B, max_len=8)
+    outs = []
+    for t in range(6):
+        logits, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_limits_attention():
+    """With window w, token t must be independent of tokens < t - w + 1."""
+    import dataclasses
+    cfg = dataclasses.replace(reduced(all_configs()["mixtral-8x7b"]),
+                              sliding_window=4, n_experts=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab_size)  # perturb far past
+    l1 = model.forward(params, {"tokens": t1})
+    l2 = model.forward(params, {"tokens": t2})
+    # positions >= 2*window away from the perturbed token are unaffected
+    # (information propagates one window per layer; use last position w/ 2 layers)
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on system-level scheduler invariants."""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DS, LDS, CocktailConfig, init_state, run, step,
+                        training_weights, sample_network_state)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(2, 4))
+@settings(max_examples=8, deadline=None)
+def test_invariants_random_topologies(seed, n_cu, n_ec):
+    """For random sizes/seeds: queues and multipliers stay nonnegative and
+    finite, cost accumulates monotonically, trained samples never exceed
+    collected samples (conservation)."""
+    cfg = CocktailConfig(n_cu=n_cu, n_ec=n_ec, eps=0.15, pair_iters=15,
+                         seed=seed % 97)
+    st_, recs = run(cfg, DS, 12)
+    q = np.asarray(st_.queues.q)
+    r = np.asarray(st_.queues.r)
+    for m in (st_.mults.mu, st_.mults.eta, st_.mults.phi, st_.mults.lam):
+        m = np.asarray(m)
+        assert (m >= 0).all() and np.isfinite(m).all()
+    assert (q >= -1e-4).all() and (r >= -1e-4).all()
+    costs = np.asarray(recs.cost)
+    assert (costs >= -1e-3).all()
+    # conservation: total trained <= total collected (uploaded);
+    # relative tolerance for f32 accumulation across slots
+    up = float(st_.uploaded.sum())
+    assert float(st_.total_trained) <= up * (1 + 1e-5) + 1.0
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_training_weight_identity(seed):
+    """gamma[i,j,k] == beta[i,k] + eta[i,j] - eta[i,k] - e[j,k] (eq. 18)."""
+    rng = np.random.default_rng(seed)
+    n, m = 5, 3
+    cfg = CocktailConfig(n_cu=n, n_ec=m, seed=seed % 13)
+    state = init_state(cfg)
+    key = jax.random.PRNGKey(seed % 1000)
+    net = sample_network_state(key, cfg, jnp.asarray(0))
+    mults = state.mults._replace(
+        eta=jnp.asarray(rng.uniform(0, 5, (n, m)), jnp.float32),
+        phi=jnp.asarray(rng.uniform(0, 2, (n, m)), jnp.float32),
+        lam=jnp.asarray(rng.uniform(0, 2, (n, m)), jnp.float32))
+    beta, gamma = training_weights(cfg, net, mults, use_lsa=True)
+    beta, gamma = np.asarray(beta), np.asarray(gamma)
+    eta = np.asarray(mults.eta)
+    e = np.asarray(net.e)
+    for i in range(n):
+        for j in range(m):
+            for k in range(m):
+                expect = beta[i, k] + eta[i, j] - eta[i, k] - e[j, k]
+                np.testing.assert_allclose(gamma[i, j, k], expect, rtol=1e-5,
+                                           atol=1e-4)
+
+
+def test_long_term_skew_constraint_approached():
+    """With a feasible generation rate, DS's cumulative per-CU training
+    fractions approach zeta_i / sum(zeta) within a few deltas (eq. 9 is a
+    time-average constraint; exact satisfaction is asymptotic)."""
+    cfg = CocktailConfig(n_cu=5, n_ec=3, delta=0.05, eps=0.15, pair_iters=20,
+                         seed=11)
+    st_, _ = run(cfg, DS, 120)
+    omega = np.asarray(st_.queues.omega, np.float64)
+    frac = omega.sum(axis=1) / max(omega.sum(), 1e-9)  # per-CU overall share
+    target = cfg.proportions
+    assert np.abs(frac - target).max() < 4 * cfg.delta
+
+
+def test_lds_effective_multiplier_shift():
+    """L-DS schedules with Theta~ = Theta + Theta' - pi: after warm-up the
+    empirical multipliers are non-trivial (they learned the state)."""
+    cfg = CocktailConfig(n_cu=6, n_ec=3, eps=0.05, pair_iters=15, seed=3)
+    st_, _ = run(cfg, LDS, 30)
+    emp = np.asarray(st_.emp_mults.mu)
+    assert np.isfinite(emp).all()
+    assert emp.sum() > 0  # learned something
