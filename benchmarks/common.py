@@ -49,3 +49,14 @@ def sim_config(n_cu=20, n_ec=5, **overrides) -> CocktailConfig:
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_json(name: str, **fields):
+    """Machine-readable benchmark row: one `BENCH {...}` JSON line per
+    measurement so external tooling can track the perf trajectory across PRs
+    without parsing the human CSV."""
+    import json
+
+    row = {"bench": name}
+    row.update(fields)
+    print("BENCH " + json.dumps(row, sort_keys=True))

@@ -1,0 +1,73 @@
+"""Fleet scalability: per-slot wall time of one jitted K-slice program vs K.
+
+The batch-first refactor's headline claim is that K heterogeneous slices cost
+ONE compiled program whose per-slot time grows sublinearly in K (vmap turns
+the K-way Python loop into batched kernels). This benchmark sweeps K at a
+fixed slice shape, reports slices x slots/sec and per-slot microseconds, and
+emits `BENCH {...}` JSON rows (see ``common.emit_json``) so the perf
+trajectory starts recording. The single-slice (N, M) sweep lives in
+``sched_scale``; this is its fleet-axis counterpart.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import DS, CocktailConfig, FleetEngine
+
+from .common import emit, emit_json
+
+
+def _heterogeneous_configs(k: int, n_cu: int, n_ec: int) -> list[CocktailConfig]:
+    """K slices sharing one shape but with per-slice rates/costs/budgets."""
+    cfgs = []
+    for s in range(k):
+        cfgs.append(CocktailConfig(
+            n_cu=n_cu, n_ec=n_ec, pair_iters=20, seed=s,
+            zeta=400.0 + 50.0 * (s % 5),
+            eps=0.1 + 0.02 * (s % 3),
+            f_base=tuple(8000.0 + 4000.0 * ((s + j) % 4) for j in range(n_ec)),
+            c_base=50.0 + 25.0 * (s % 4),
+        ))
+    return cfgs
+
+
+def fleet_scale(ks=(1, 2, 4, 8, 16), n_cu: int = 8, n_ec: int = 3,
+                slots: int = 8, repeat: int = 3):
+    """Default shape is the paper-testbed scale, where per-slot cost is
+    dispatch-overhead dominated and batching K slices is strongly sublinear
+    (~10x wall for K=16 on CPU). Large shapes (N=32, M=8) are compute-bound
+    and scale ~linearly in K on CPU — there the win is devices: shard the K
+    axis over a mesh (FleetEngine.run(mesh=...))."""
+    rows = {}
+    base_us = None
+    for k in ks:
+        eng = FleetEngine.from_configs(_heterogeneous_configs(k, n_cu, n_ec), DS)
+        state = eng.init()
+        st, _ = eng.run(slots, state)  # compile + warmup
+        jax.block_until_ready(st.queues.q)
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            st, _ = eng.run(slots, state)
+        jax.block_until_ready(st.queues.q)
+        dt = (time.perf_counter() - t0) / repeat
+        us_per_slot = dt / slots * 1e6
+        slice_slots_per_sec = k * slots / dt
+        if base_us is None:
+            base_us = us_per_slot
+        rows[k] = us_per_slot
+        emit(f"fleet_scale/K{k}xN{n_cu}xM{n_ec}", us_per_slot,
+             f"{slice_slots_per_sec:.0f} slice-slots/s")
+        emit_json("fleet_scale", k=k, n_cu=n_cu, n_ec=n_ec,
+                  us_per_slot=round(us_per_slot, 1),
+                  us_per_slot_per_slice=round(us_per_slot / k, 1),
+                  slice_slots_per_sec=round(slice_slots_per_sec, 1),
+                  base_k=ks[0],
+                  scaling_vs_base=round(us_per_slot / base_us, 3))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    fleet_scale()

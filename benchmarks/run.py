@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig9        unit framework cost vs baselines across N / M (headline: cost
               reduction vs CUFull)
   sched_scale scheduler wall-time scaling + matching kernel
+  fleet_scale K-slice fleet engine scaling (BENCH JSON rows)
   roofline    aggregated dry-run roofline terms (run scripts/dryrun_sweep.sh
               first; missing artifacts are skipped gracefully)
 """
@@ -18,7 +19,7 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import fig7_accuracy, paper_figs, roofline, sched_scale
+    from . import fig7_accuracy, fleet_scale, paper_figs, roofline, sched_scale
 
     sections = [
         ("fig5", paper_figs.fig5_collection_evenness),
@@ -27,6 +28,7 @@ def main() -> None:
         ("fig8", paper_figs.fig8_ds_vs_lds),
         ("fig9", paper_figs.fig9_unit_cost),
         ("sched_scale", sched_scale.sched_scale),
+        ("fleet_scale", fleet_scale.fleet_scale),
         ("matching", sched_scale.matching_kernel_bench),
         ("roofline", roofline.roofline_table),
     ]

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import DS, CocktailConfig, init_state, step
 
-from .common import emit
+from .common import emit, emit_json
 
 
 def sched_scale():
@@ -31,6 +31,7 @@ def sched_scale():
         us = (time.perf_counter() - t0) / 3 * 1e6
         rows[(n_cu, n_ec)] = us
         emit(f"sched_scale/N{n_cu}xM{n_ec}", us, f"{us/1e3:.1f}ms/slot")
+        emit_json("sched_scale", n_cu=n_cu, n_ec=n_ec, us_per_slot=round(us, 1))
     return rows
 
 

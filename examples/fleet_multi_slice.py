@@ -1,0 +1,56 @@
+"""Fleet scheduling: one compiled program driving many network slices.
+
+A 5G operator runs heterogeneous incremental-learning jobs concurrently:
+regional traffic-prediction slices (modest arrival rates, cheap transmission,
+testbed-like EC budgets) next to tenant LM-training slices (heavy arrivals,
+pricier compute, fat ECs). With the batch-first core these are ONE
+``FleetEngine``: per-slice numbers live in a stacked ``SliceParams`` pytree
+and every slot is a single vmapped step inside one jitted scan.
+
+    PYTHONPATH=src python examples/fleet_multi_slice.py
+"""
+import dataclasses
+
+from repro.core import DS, CocktailConfig, FleetEngine
+from repro.core import metrics
+
+N_CU, N_EC, SLOTS = 12, 4, 60
+
+# Profile A: regional traffic prediction (paper testbed scaled up) ---------
+traffic = CocktailConfig(
+    n_cu=N_CU, n_ec=N_EC, delta=0.02, eps=0.1, zeta=500.0,
+    d_base=2000.0, cap_d_base=8000.0,
+    f_base=(8000.0, 20000.0, 8000.0, 14000.0),
+    c_base=50.0, e_base=50.0, p_base=200.0, pair_iters=30, seed=0,
+)
+
+# Profile B: tenant LM training — heavier arrivals, fatter ECs, pricier
+# compute, looser skew tolerance.
+lm = dataclasses.replace(
+    traffic, zeta=1200.0, delta=0.05, eps=0.15,
+    f_base=(48000.0, 48000.0, 20000.0, 20000.0),
+    c_base=80.0, p_base=120.0, seed=1,
+)
+
+slices = [
+    ("traffic/region-0", traffic),
+    ("traffic/region-1", dataclasses.replace(traffic, zeta=350.0, seed=2)),
+    ("traffic/region-2", dataclasses.replace(traffic, zeta=800.0, seed=3)),
+    ("lm/tenant-a", lm),
+    ("lm/tenant-b", dataclasses.replace(lm, zeta=900.0, eps=0.2, seed=4)),
+]
+
+engine = FleetEngine.from_configs([cfg for _, cfg in slices], DS)
+print(f"fleet: {engine.n_slices} slices x {SLOTS} slots, shape "
+      f"N={engine.shape.n_cu} M={engine.shape.n_ec} — one jitted scan\n")
+
+state, recs = engine.run(SLOTS)
+
+print(f"{'slice':18s} {'unit_cost':>9s} {'trained':>10s} {'skew':>7s} {'q_backlog':>10s}")
+for k, (name, cfg) in enumerate(slices):
+    s = metrics.summary(cfg, engine.slice_state(state, k))
+    print(f"{name:18s} {s['unit_cost']:9.2f} {s['total_trained']:10.0f} "
+          f"{s['skew_degree']:7.4f} {s['q_backlog']:10.0f}")
+
+print("\nper-slot fleet cost (records are time-major (T, K)):",
+      tuple(recs.cost.shape))

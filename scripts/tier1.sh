@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Single entrypoint for the ROADMAP tier-1 verify, for builders and CI alike:
+#
+#   scripts/tier1.sh [extra pytest args...]
+#
+# Installs the dev requirements when pip + network are available (best-effort:
+# hypothesis-gated modules skip cleanly without them) and runs the suite with
+# PYTHONPATH=src from the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${TIER1_SKIP_INSTALL:-0}" != "1" ]]; then
+    python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+        || echo "tier1: dev requirements unavailable (offline?); continuing" >&2
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -1,25 +1,30 @@
 """Cocktail core: cost-efficient, data-skew-aware online data scheduling.
 
 Public API:
-  CocktailConfig, NetworkState, QueueState, Multipliers, Decision,
-  SchedulerState, init_state           -- state types
+  CocktailConfig, ShapeConfig, SliceParams, split_config, stack_slice_params,
+  NetworkState, QueueState, Multipliers, Decision,
+  SchedulerState, init_state           -- state types (batch-first split)
   sample_network_state, framework_cost -- stochastic environment (Sec. II)
   step, run, AlgoSpec and the named specs (DS, LDS, NO_SDC, ...) -- Sec. III
+  FleetEngine                          -- K-slice vmapped fleet scheduling
   metrics                              -- Sec. IV evaluation metrics
 """
 from .datasche import (ALL_SPECS, CU_FULL, DS, DS_EXACT, EC_FULL, EC_SELF,
                        GREEDY, LDS, NO_LSA, NO_SDC, NO_SLT, AlgoSpec,
-                       SlotRecord, collection_weights, run, skew_degree, step,
-                       training_weights)
+                       SlotRecord, collection_weights, run, skew_degree,
+                       stack_slot_records, step, training_weights)
+from .fleet import FleetEngine
 from .network import framework_cost, sample_network_state
 from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
-                    QueueState, SchedulerState, init_state)
+                    QueueState, SchedulerState, ShapeConfig, SliceParams,
+                    init_state, split_config, stack_slice_params)
 
 __all__ = [
     "ALL_SPECS", "AlgoSpec", "CocktailConfig", "CU_FULL", "DS", "DS_EXACT",
-    "Decision", "EC_FULL", "EC_SELF", "GREEDY", "LDS", "Multipliers",
-    "NetworkState", "NO_LSA", "NO_SDC", "NO_SLT", "QueueState",
-    "SchedulerState", "SlotRecord", "collection_weights", "framework_cost",
-    "init_state", "run", "sample_network_state", "skew_degree", "step",
-    "training_weights",
+    "Decision", "EC_FULL", "EC_SELF", "FleetEngine", "GREEDY", "LDS",
+    "Multipliers", "NetworkState", "NO_LSA", "NO_SDC", "NO_SLT", "QueueState",
+    "SchedulerState", "ShapeConfig", "SliceParams", "SlotRecord",
+    "collection_weights", "framework_cost", "init_state", "run",
+    "sample_network_state", "skew_degree", "split_config",
+    "stack_slice_params", "stack_slot_records", "step", "training_weights",
 ]

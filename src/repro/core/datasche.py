@@ -15,12 +15,19 @@ NO-SLT, NO-LSA, Greedy, ECFull, ECSelf, CUFull) is a one-line variant.
 ``exact=False`` (production) is fully jittable and driven by ``lax.scan``;
 ``exact=True`` swaps the greedy matchers for the networkx Thm.-1/Thm.-2
 oracles and runs a host loop.
+
+Batch-first convention: everything numeric that can differ between network
+slices lives in a ``SliceParams`` pytree (traced), while shapes and control
+flow live in the hashable ``ShapeConfig`` (static). ``step``/``run`` accept
+either the frontend ``CocktailConfig`` or an explicit split; a fleet of K
+slices is ``jax.vmap`` of ``step`` over stacked params/state (see
+``repro.core.fleet``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +36,8 @@ import numpy as np
 from . import matching, training_alloc
 from .network import framework_cost, sample_network_state
 from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
-                    QueueState, SchedulerState, init_state)
+                    QueueState, SchedulerState, ShapeConfig, SliceParams,
+                    init_state, split_config)
 
 _TINY = 1e-9
 
@@ -70,18 +78,19 @@ def collection_weights(net: NetworkState, mults: Multipliers) -> jax.Array:
     return net.d * (mults.mu[:, None] - mults.eta - net.c)
 
 
-def training_weights(cfg: CocktailConfig, net: NetworkState, mults: Multipliers,
-                     use_lsa: bool) -> tuple[jax.Array, jax.Array]:
+def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
+                     mults: Multipliers, use_lsa: bool,
+                     params: Optional[SliceParams] = None) -> tuple[jax.Array, jax.Array]:
     """Returns (beta (N,M), gamma (N,M,M)).
 
     beta[i,j]    weight of x[i,j]   (eq. 18 x-coefficient)
     gamma[i,j,k] weight of y[i,j,k] (from queue R[i,j], trained at EC k)
                  = beta[i,k] + eta[i,j] - eta[i,k] - e[j,k]
     """
+    _, params = split_config(cfg, params)
     phi = mults.phi if use_lsa else jnp.zeros_like(mults.phi)
     lam = mults.lam if use_lsa else jnp.zeros_like(mults.lam)
-    d_hi = jnp.asarray(cfg.delta_hi, jnp.float32)
-    d_lo = jnp.asarray(cfg.delta_lo, jnp.float32)
+    d_hi, d_lo = params.delta_hi, params.delta_lo
     common = jnp.sum(lam * d_hi[:, None] - phi * d_lo[:, None], axis=0)  # (M,)
     beta = -net.p[None, :] + mults.eta - lam + phi + common[None, :]
     gamma = (beta[:, None, :] + mults.eta[:, :, None]
@@ -93,7 +102,7 @@ def training_weights(cfg: CocktailConfig, net: NetworkState, mults: Multipliers,
 # Collection policies
 # --------------------------------------------------------------------------
 
-def _collect_skew(cfg, net, mults, queues, exact):
+def _collect_skew(shape, params, net, mults, queues, exact):
     w = collection_weights(net, mults)
     logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, _TINY)), -jnp.inf)
     if exact:
@@ -103,16 +112,23 @@ def _collect_skew(cfg, net, mults, queues, exact):
     return matching.greedy_collection(logw)
 
 
-def _collect_plain(cfg, net, mults, queues, exact):
+def _collect_plain(shape, params, net, mults, queues, exact):
+    # Imported lazily: kernels/matching/ref.py depends on core.matching, so a
+    # top-level import here would be circular when the kernels package loads
+    # first. Trace-time only (sys.modules hit after the first call).
+    from ..kernels.matching import ops as matching_ops
+
     w = collection_weights(net, mults)
-    alpha = matching.greedy_assignment(w)
+    # Production path dispatches through the kernels layer: Pallas on TPU,
+    # the (identical) jnp greedy elsewhere; both vmap over a slice axis.
+    alpha = matching_ops.greedy_assignment(w)
     return alpha, alpha  # theta = 1 on the selected connection
 
 
-def _collect_cufull(cfg, net, mults, queues, exact):
-    n = cfg.n_cu
-    alpha = jnp.ones((cfg.n_cu, cfg.n_ec), jnp.float32)
-    theta = jnp.full((cfg.n_cu, cfg.n_ec), 1.0 / n, jnp.float32)
+def _collect_cufull(shape, params, net, mults, queues, exact):
+    n = shape.n_cu
+    alpha = jnp.ones((shape.n_cu, shape.n_ec), jnp.float32)
+    theta = jnp.full((shape.n_cu, shape.n_ec), 1.0 / n, jnp.float32)
     return alpha, theta
 
 
@@ -123,7 +139,10 @@ _COLLECTORS = {"skew": _collect_skew, "plain": _collect_plain, "cufull": _collec
 # Training policies
 # --------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
 def _pair_index(m: int) -> tuple[np.ndarray, np.ndarray]:
+    # Cached per M: this is hit on every trace of every policy variant and
+    # np.triu_indices is pure host-side work.
     pj, pk = np.triu_indices(m, k=1)
     return pj.astype(np.int32), pk.astype(np.int32)
 
@@ -145,10 +164,10 @@ def _compose_from_match(match, x_solo, pairs, pa, m):
     return x, y, z
 
 
-def _train_generic(cfg, net, mults, queues, exact, use_lsa, solo_fn, pair_fn):
-    beta, gamma = training_weights(cfg, net, mults, use_lsa)
-    budgets = net.f / cfg.rho
-    m = cfg.n_ec
+def _train_generic(shape, params, net, mults, queues, exact, use_lsa, solo_fn, pair_fn):
+    beta, gamma = training_weights(shape, net, mults, use_lsa, params)
+    budgets = net.f / params.rho
+    m = shape.n_ec
 
     x_solo, val_solo = jax.vmap(solo_fn, in_axes=(1, 1, 0), out_axes=(1, 0))(
         beta, queues.r, budgets)
@@ -176,31 +195,31 @@ def _train_generic(cfg, net, mults, queues, exact, use_lsa, solo_fn, pair_fn):
     return x, y, z
 
 
-def _train_skew(cfg, net, mults, queues, exact, use_lsa):
-    pair_fn = functools.partial(training_alloc.pair_allocate, iters=cfg.pair_iters)
-    return _train_generic(cfg, net, mults, queues, exact, use_lsa,
+def _train_skew(shape, params, net, mults, queues, exact, use_lsa):
+    pair_fn = functools.partial(training_alloc.pair_allocate, iters=shape.pair_iters)
+    return _train_generic(shape, params, net, mults, queues, exact, use_lsa,
                           training_alloc.solo_waterfill, pair_fn)
 
 
-def _train_linear(cfg, net, mults, queues, exact, use_lsa):
-    return _train_generic(cfg, net, mults, queues, exact, use_lsa,
+def _train_linear(shape, params, net, mults, queues, exact, use_lsa):
+    return _train_generic(shape, params, net, mults, queues, exact, use_lsa,
                           training_alloc.linear_solo, training_alloc.linear_pair)
 
 
-def _train_solo(cfg, net, mults, queues, exact, use_lsa):
-    beta, _ = training_weights(cfg, net, mults, use_lsa)
-    budgets = net.f / cfg.rho
+def _train_solo(shape, params, net, mults, queues, exact, use_lsa):
+    beta, _ = training_weights(shape, net, mults, use_lsa, params)
+    budgets = net.f / params.rho
     x, _ = jax.vmap(training_alloc.solo_waterfill, in_axes=(1, 1, 0), out_axes=(1, 0))(
         beta, queues.r, budgets)
-    m = cfg.n_ec
-    return x, jnp.zeros((cfg.n_cu, m, m), jnp.float32), jnp.zeros((m, m), jnp.float32)
+    m = shape.n_ec
+    return x, jnp.zeros((shape.n_cu, m, m), jnp.float32), jnp.zeros((m, m), jnp.float32)
 
 
-def _train_ecfull(cfg, net, mults, queues, exact, use_lsa):
-    beta, gamma = training_weights(cfg, net, mults, use_lsa)
-    budgets = net.f / cfg.rho
+def _train_ecfull(shape, params, net, mults, queues, exact, use_lsa):
+    beta, gamma = training_weights(shape, net, mults, use_lsa, params)
+    budgets = net.f / params.rho
     x, y, _ = training_alloc.full_allocate(beta, gamma, queues.r, budgets, net.cap_d)
-    m = cfg.n_ec
+    m = shape.n_ec
     return x, y, jnp.ones((m, m), jnp.float32) - jnp.eye(m, dtype=jnp.float32)
 
 
@@ -220,14 +239,15 @@ def _served(dec_alpha, dec_theta, net, queues):
     return req * scale[:, None]
 
 
-def update_multipliers(cfg: CocktailConfig, mults: Multipliers, net: NetworkState,
-                       served: jax.Array, x: jax.Array, y: jax.Array,
-                       use_lsa: bool, step: jax.Array | float) -> Multipliers:
+def update_multipliers(cfg: CocktailConfig | ShapeConfig, mults: Multipliers,
+                       net: NetworkState, served: jax.Array, x: jax.Array,
+                       y: jax.Array, use_lsa: bool, step: jax.Array | float,
+                       params: Optional[SliceParams] = None) -> Multipliers:
+    _, params = split_config(cfg, params)
     dep_r = x + jnp.sum(y, axis=2)  # leaves queue R[i,j]
     trained_at = x + jnp.sum(y, axis=1)  # trained at EC k
     tot_j = jnp.sum(trained_at, axis=0)
-    d_hi = jnp.asarray(cfg.delta_hi, jnp.float32)
-    d_lo = jnp.asarray(cfg.delta_lo, jnp.float32)
+    d_hi, d_lo = params.delta_hi, params.delta_lo
 
     mu = jnp.maximum(mults.mu + step * (net.arrivals - jnp.sum(served, axis=1)), 0.0)
     eta = jnp.maximum(mults.eta + step * (served - dep_r), 0.0)
@@ -239,8 +259,9 @@ def update_multipliers(cfg: CocktailConfig, mults: Multipliers, net: NetworkStat
     return Multipliers(mu=mu, eta=eta, phi=phi, lam=lam)
 
 
-def apply_decision(cfg: CocktailConfig, queues: QueueState, net: NetworkState,
-                   served: jax.Array, x: jax.Array, y: jax.Array) -> QueueState:
+def apply_decision(cfg: CocktailConfig | ShapeConfig, queues: QueueState,
+                   net: NetworkState, served: jax.Array, x: jax.Array,
+                   y: jax.Array) -> QueueState:
     dep_r = x + jnp.sum(y, axis=2)
     trained_at = x + jnp.sum(y, axis=1)
     q = jnp.maximum(queues.q - jnp.sum(served, axis=1), 0.0) + net.arrivals
@@ -260,56 +281,74 @@ class SlotRecord(NamedTuple):
     skew: jax.Array
 
 
-def skew_degree(cfg: CocktailConfig, omega: jax.Array) -> jax.Array:
+def stack_slot_records(recs: Sequence[SlotRecord]) -> SlotRecord:
+    """Stack per-slot records time-major, mirroring what ``lax.scan`` produces
+    on the jitted path (leading axis = slot index)."""
+    return SlotRecord(*[jnp.stack([getattr(r, f) for r in recs])
+                        for f in SlotRecord._fields])
+
+
+def skew_degree(cfg: CocktailConfig | ShapeConfig | SliceParams, omega: jax.Array,
+                params: Optional[SliceParams] = None) -> jax.Array:
     """max_{i,j} | Omega_ij / sum_l Omega_lj - zeta_i / sum zeta | (eq. 9 LHS)."""
-    props = jnp.asarray(cfg.proportions, jnp.float32)
+    if params is None and isinstance(cfg, SliceParams):
+        params = cfg
+    else:
+        _, params = split_config(cfg, params)
+    props = params.proportions
     tot = jnp.sum(omega, axis=0, keepdims=True)
     frac = omega / jnp.maximum(tot, _TINY)
     dev = jnp.abs(frac - props[:, None])
     return jnp.max(jnp.where(tot > _TINY, dev, 0.0))
 
 
-def _pi(cfg: CocktailConfig) -> float:
+def _pi(params: SliceParams) -> jax.Array:
     """L-DS distance parameter pi = sqrt(eps) * log^2(eps) ([24],[25])."""
-    return float(np.sqrt(cfg.eps) * np.log(cfg.eps) ** 2)
+    return jnp.sqrt(params.eps) * jnp.log(params.eps) ** 2
 
 
-def _tree_affine(a: Multipliers, b: Multipliers, shift: float) -> Multipliers:
+def _tree_affine(a: Multipliers, b: Multipliers, shift: jax.Array) -> Multipliers:
     return jax.tree.map(lambda x, y: x + y - shift, a, b)
 
 
-def step(cfg: CocktailConfig, spec: AlgoSpec, state: SchedulerState,
-         net: Optional[NetworkState] = None) -> tuple[SchedulerState, SlotRecord, Decision]:
-    """Run one slot. Jittable when spec.exact is False (cfg/spec static)."""
+def step(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, state: SchedulerState,
+         net: Optional[NetworkState] = None,
+         params: Optional[SliceParams] = None) -> tuple[SchedulerState, SlotRecord, Decision]:
+    """Run one slot. Jittable when spec.exact is False (cfg/spec static,
+    params traced); vmappable over a leading slice axis of (params, state)."""
+    shape, params = split_config(cfg, params)
     rng, k_net = jax.random.split(state.rng)
     if net is None:
-        net = sample_network_state(k_net, cfg, state.t)
+        net = sample_network_state(k_net, shape, state.t, params)
 
     if spec.learning_aid:
-        eff = _tree_affine(state.mults, state.emp_mults, _pi(cfg))
+        eff = _tree_affine(state.mults, state.emp_mults, _pi(params))
     else:
         eff = state.mults
 
     collect = _COLLECTORS[spec.collection]
     train = _TRAINERS[spec.training]
-    alpha, theta = collect(cfg, net, eff, state.queues, spec.exact)
-    x, y, z = train(cfg, net, eff, state.queues, spec.exact, spec.use_lsa)
+    alpha, theta = collect(shape, params, net, eff, state.queues, spec.exact)
+    x, y, z = train(shape, params, net, eff, state.queues, spec.exact, spec.use_lsa)
 
     served = _served(alpha, theta, net, state.queues)
     cost = framework_cost(net, served, x, y)
-    queues = apply_decision(cfg, state.queues, net, served, x, y)
-    mults = update_multipliers(cfg, state.mults, net, served, x, y, spec.use_lsa, cfg.eps)
+    queues = apply_decision(shape, state.queues, net, served, x, y)
+    mults = update_multipliers(shape, state.mults, net, served, x, y,
+                               spec.use_lsa, params.eps, params)
 
     emp = state.emp_mults
     if spec.learning_aid:
         # Virtual decisions from plain P1/P2 with the empirical multipliers;
         # they update Theta' only (diminishing step), never the real queues.
-        v_alpha, v_theta = _collect_plain(cfg, net, state.emp_mults, state.queues, False)
-        v_x, v_y, _ = _train_linear(cfg, net, state.emp_mults, state.queues, False, spec.use_lsa)
+        v_alpha, v_theta = _collect_plain(shape, params, net, state.emp_mults,
+                                          state.queues, False)
+        v_x, v_y, _ = _train_linear(shape, params, net, state.emp_mults,
+                                    state.queues, False, spec.use_lsa)
         v_served = _served(v_alpha, v_theta, net, state.queues)
-        sigma = cfg.sigma0 / jnp.sqrt(state.t.astype(jnp.float32) + 1.0)
-        emp = update_multipliers(cfg, state.emp_mults, net, v_served, v_x, v_y,
-                                 spec.use_lsa, sigma)
+        sigma = params.sigma0 / jnp.sqrt(state.t.astype(jnp.float32) + 1.0)
+        emp = update_multipliers(shape, state.emp_mults, net, v_served, v_x, v_y,
+                                 spec.use_lsa, sigma, params)
 
     trained = jnp.sum(x) + jnp.sum(y)
     new_state = SchedulerState(
@@ -323,7 +362,7 @@ def step(cfg: CocktailConfig, spec: AlgoSpec, state: SchedulerState,
     rec = SlotRecord(
         cost=cost, trained=trained,
         q_backlog=jnp.sum(queues.q), r_backlog=jnp.sum(queues.r),
-        skew=skew_degree(cfg, queues.omega),
+        skew=skew_degree(shape, queues.omega, params),
     )
     dec = Decision(alpha=alpha, theta=theta, x=x, y=y, z=z)
     return new_state, rec, dec
@@ -334,27 +373,28 @@ def step(cfg: CocktailConfig, spec: AlgoSpec, state: SchedulerState,
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _run_scan(cfg: CocktailConfig, spec: AlgoSpec, n_slots: int,
-              state: SchedulerState) -> tuple[SchedulerState, SlotRecord]:
+def _run_scan(shape: ShapeConfig, spec: AlgoSpec, n_slots: int,
+              params: SliceParams, state: SchedulerState) -> tuple[SchedulerState, SlotRecord]:
     def body(s, _):
-        s2, rec, _ = step(cfg, spec, s)
+        s2, rec, _ = step(shape, spec, s, params=params)
         return s2, rec
 
     return jax.lax.scan(body, state, None, length=n_slots)
 
 
-def run(cfg: CocktailConfig, spec: AlgoSpec, n_slots: int,
-        state: Optional[SchedulerState] = None) -> tuple[SchedulerState, SlotRecord]:
+def run(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, n_slots: int,
+        state: Optional[SchedulerState] = None,
+        params: Optional[SliceParams] = None) -> tuple[SchedulerState, SlotRecord]:
     """Run n_slots of the online algorithm; returns (final state, stacked
-    per-slot records)."""
+    per-slot records). Only ShapeConfig/AlgoSpec trigger recompilation —
+    slices that differ only in SliceParams share one compiled program."""
+    shape, params = split_config(cfg, params)
     if state is None:
-        state = init_state(cfg)
+        state = init_state(shape, params, seed=getattr(cfg, "seed", 0))
     if not spec.exact:
-        return _run_scan(cfg, spec, n_slots, state)
+        return _run_scan(shape, spec, n_slots, params, state)
     recs = []
     for _ in range(n_slots):
-        state, rec, _ = step(cfg, spec, state)
+        state, rec, _ = step(shape, spec, state, params=params)
         recs.append(rec)
-    stacked = SlotRecord(*[jnp.stack([getattr(r, f) for r in recs])
-                           for f in SlotRecord._fields])
-    return state, stacked
+    return state, stack_slot_records(recs)

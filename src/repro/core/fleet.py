@@ -1,0 +1,145 @@
+"""Fleet engine: one compiled program scheduling K network slices at once.
+
+A real 5G operator runs many concurrent incremental-learning jobs — one
+traffic-prediction slice per region, one per tenant — not the single slice of
+the paper's testbed. The batch-first core makes this a pure data-parallel
+problem: all per-slice numbers live in a ``SliceParams`` pytree, so a fleet
+is just that pytree with a leading K axis, and one slot of the whole fleet is
+``jax.vmap(step)`` over (params, state). The slot loop is a single
+``lax.scan``; the result is ONE jitted program for K heterogeneous slices.
+
+Axis conventions (documented in ROADMAP.md):
+  * stacked ``SliceParams`` / ``SchedulerState``: leading axis = slice (K)
+  * stacked ``SlotRecord`` returned by :meth:`FleetEngine.run`: time-major
+    (T, K) — axis 0 is the slot, matching single-slice ``run``'s (T,)
+  * optional device sharding splits the K axis over a mesh axis via
+    ``launch.mesh.shard_leading_axis`` (NamedSharding, trailing axes
+    replicated)
+
+Constraints: all slices of a fleet share one ``ShapeConfig`` (N, M and solver
+iteration counts are compile-time) and one ``AlgoSpec``; ``exact`` specs are
+host-side and cannot be vmapped. Run several fleets for mixed shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .datasche import AlgoSpec, DS, SlotRecord, step
+from .types import (CocktailConfig, Decision, SchedulerState, ShapeConfig,
+                    SliceParams, init_state, split_config, stack_slice_params)
+
+
+def unstack(tree, k: int):
+    """Extract slice k from a stacked (K, ...) pytree (state, params, recs)."""
+    return jax.tree.map(lambda l: l[k], tree)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _fleet_scan(shape: ShapeConfig, spec: AlgoSpec, n_slots: int,
+                params: SliceParams, state: SchedulerState
+                ) -> tuple[SchedulerState, SlotRecord]:
+    def one_slot(p, s):
+        s2, rec, _ = step(shape, spec, s, params=p)
+        return s2, rec
+
+    vstep = jax.vmap(one_slot)
+
+    def body(s, _):
+        s2, rec = vstep(params, s)
+        return s2, rec
+
+    return jax.lax.scan(body, state, None, length=n_slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetEngine:
+    """K-slice batch scheduler: vmapped ``step`` inside one jitted scan.
+
+    Build with :meth:`from_configs` (heterogeneous ``CocktailConfig`` list
+    sharing one shape) or directly from pre-stacked ``SliceParams``.
+    """
+
+    shape: ShapeConfig
+    spec: AlgoSpec
+    params: SliceParams  # stacked, leading axis K
+    n_slices: int
+    seeds: tuple[int, ...]
+
+    def __post_init__(self):
+        if self.spec.exact:
+            raise ValueError("exact (host-side oracle) specs cannot be vmapped; "
+                             "use datasche.run per slice instead")
+
+    @classmethod
+    def from_configs(cls, configs: Sequence[CocktailConfig],
+                     spec: AlgoSpec = DS) -> "FleetEngine":
+        if not configs:
+            raise ValueError("need at least one slice config")
+        shapes = {c.shape for c in configs}
+        if len(shapes) != 1:
+            raise ValueError(f"fleet slices must share one ShapeConfig, got {shapes}; "
+                             "run mixed shapes as separate fleets")
+        return cls(
+            shape=configs[0].shape,
+            spec=spec,
+            params=stack_slice_params([c.params for c in configs]),
+            n_slices=len(configs),
+            seeds=tuple(int(c.seed) for c in configs),
+        )
+
+    @classmethod
+    def from_params(cls, shape: ShapeConfig, params: SliceParams,
+                    spec: AlgoSpec = DS,
+                    seeds: Optional[Sequence[int]] = None) -> "FleetEngine":
+        """Adopt an already-stacked (K, ...) SliceParams pytree."""
+        k = params.eps.shape[0]
+        seeds = tuple(seeds) if seeds is not None else tuple(range(k))
+        if len(seeds) != k:
+            raise ValueError(f"{k} slices but {len(seeds)} seeds")
+        return cls(shape=shape, spec=spec, params=params, n_slices=k, seeds=seeds)
+
+    # -- state ------------------------------------------------------------
+
+    def init(self) -> SchedulerState:
+        """Stacked initial state: slice k gets params[k] and PRNGKey(seeds[k])."""
+        states = [init_state(self.shape, unstack(self.params, k), seed=self.seeds[k])
+                  for k in range(self.n_slices)]
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+
+    def slice_state(self, state: SchedulerState, k: int) -> SchedulerState:
+        """Slice k's SchedulerState (for per-slice metrics.summary etc.)."""
+        return unstack(state, k)
+
+    # -- execution --------------------------------------------------------
+
+    def step(self, state: SchedulerState
+             ) -> tuple[SchedulerState, SlotRecord, Decision]:
+        """One fleet slot (eager vmap; prefer :meth:`run` for loops)."""
+        new_state, rec, dec = jax.vmap(
+            lambda p, s: step(self.shape, self.spec, s, params=p)
+        )(self.params, state)
+        return new_state, rec, dec
+
+    def run(self, n_slots: int, state: Optional[SchedulerState] = None,
+            mesh=None, axis_name: str = "data"
+            ) -> tuple[SchedulerState, SlotRecord]:
+        """Run the whole fleet for n_slots inside one jitted scan.
+
+        Returns (stacked final state (K, ...), stacked records (T, K)).
+        With ``mesh``, the K axis of params/state is sharded over
+        ``mesh[axis_name]`` before the scan (K % axis size must be 0) and XLA
+        partitions every slot across devices.
+        """
+        if state is None:
+            state = self.init()
+        params = self.params
+        if mesh is not None:
+            from ..launch.mesh import shard_leading_axis
+            params = shard_leading_axis(params, mesh, axis_name)
+            state = shard_leading_axis(state, mesh, axis_name)
+        return _fleet_scan(self.shape, self.spec, n_slots, params, state)

@@ -20,6 +20,11 @@ contributes log(u) to an edge weight when u > 0 — allocating nothing to a
 source is always feasible and contributes 0 (matches the paper's implicit
 restriction to positively-weighted sources; log of a non-positive allocation
 is undefined).
+
+Batch-first: every solver here is shape-polymorphic pure JAX over (N,)
+vectors — budgets, caps, and weights may all be traced ``SliceParams``-derived
+values, and the whole module vmaps transparently over a leading fleet slice
+axis (no Python branching on data anywhere).
 """
 from __future__ import annotations
 

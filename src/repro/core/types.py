@@ -29,8 +29,76 @@ import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """Static (hashable, trace-time) part of a slice configuration.
+
+    Only fields that determine array shapes or compiled control flow live
+    here; everything numeric that can differ between slices of a fleet is a
+    runtime ``SliceParams`` leaf. A jit/scan/vmap program is specialised on
+    ``ShapeConfig`` + ``AlgoSpec`` alone, so K heterogeneous slices with the
+    same shape share one compiled program.
+    """
+
+    n_cu: int  # N data sources
+    n_ec: int  # M ML workers
+    pair_iters: int = 120  # pair-allocation solver iterations (PGA)
+
+
+class SliceParams(NamedTuple):
+    """Runtime (traced, vmappable) per-slice parameters.
+
+    Every leaf is a jnp array so a fleet of K slices is just this pytree with
+    a leading K axis (``stack_slice_params``). Scalars are rank-0 float32.
+    """
+
+    zeta: jax.Array  # (N,) average data generation rate per CU
+    proportions: jax.Array  # (N,) zeta / sum(zeta)
+    delta_lo: jax.Array  # (N,) \check{delta}_i skew lower bound
+    delta_hi: jax.Array  # (N,) \hat{delta}_i skew upper bound
+    eps: jax.Array  # () multiplier SGD step size
+    rho: jax.Array  # () compute cycles per sample
+    q0: jax.Array  # () initial CU queue backlog
+    sigma0: jax.Array  # () empirical-multiplier base step (L-DS)
+    d_base: jax.Array  # () CU-EC transmission capacity baseline
+    cap_d_base: jax.Array  # () EC-EC transmission capacity baseline
+    f_base: jax.Array  # (M,) EC computing capacity baseline (cycles)
+    c_base: jax.Array  # () unit CU->EC transmission cost
+    e_base: jax.Array  # () unit EC<->EC transmission cost
+    p_base: jax.Array  # () unit computing cost
+
+    @classmethod
+    def from_config(cls, cfg: "CocktailConfig") -> "SliceParams":
+        f32 = lambda v: jnp.asarray(v, jnp.float32)
+        return cls(
+            zeta=f32(cfg.zeta_vec),
+            proportions=f32(cfg.proportions),
+            delta_lo=f32(cfg.delta_lo),
+            delta_hi=f32(cfg.delta_hi),
+            eps=f32(cfg.eps),
+            rho=f32(cfg.rho),
+            q0=f32(cfg.q0),
+            sigma0=f32(cfg.sigma0),
+            d_base=f32(cfg.d_base),
+            cap_d_base=f32(cfg.cap_d_base),
+            f_base=jnp.broadcast_to(f32(cfg.f_base), (cfg.n_ec,)),
+            c_base=f32(cfg.c_base),
+            e_base=f32(cfg.e_base),
+            p_base=f32(cfg.p_base),
+        )
+
+
+def stack_slice_params(params: list["SliceParams"] | tuple["SliceParams", ...]) -> "SliceParams":
+    """Stack K per-slice parameter pytrees into one (K, ...) pytree."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *params)
+
+
+@dataclasses.dataclass(frozen=True)
 class CocktailConfig:
-    """Static configuration of one Cocktail network slice (one training job)."""
+    """Static configuration of one Cocktail network slice (one training job).
+
+    User-facing frontend; the core operates on the ``shape`` / ``params``
+    split (``split_config``) so runtime parameters stay traced and batchable.
+    """
 
     n_cu: int  # N data sources
     n_ec: int  # M ML workers
@@ -73,6 +141,26 @@ class CocktailConfig:
     @property
     def delta_hi(self) -> np.ndarray:  # \hat{delta}_i
         return np.minimum(self.proportions + self.delta, 1.0)
+
+    @property
+    def shape(self) -> ShapeConfig:
+        return ShapeConfig(n_cu=self.n_cu, n_ec=self.n_ec, pair_iters=self.pair_iters)
+
+    @property
+    def params(self) -> SliceParams:
+        return SliceParams.from_config(self)
+
+
+def split_config(
+    cfg: "CocktailConfig | ShapeConfig", params: Optional[SliceParams] = None
+) -> tuple[ShapeConfig, SliceParams]:
+    """Normalise either a frontend ``CocktailConfig`` or an explicit
+    (``ShapeConfig``, ``SliceParams``) pair into the split the core runs on."""
+    if isinstance(cfg, CocktailConfig):
+        return cfg.shape, (cfg.params if params is None else params)
+    if params is None:
+        raise TypeError("ShapeConfig requires explicit SliceParams")
+    return cfg, params
 
 
 class NetworkState(NamedTuple):
@@ -153,14 +241,21 @@ class SchedulerState(NamedTuple):
     rng: jax.Array  # PRNG key for stochastic network state
 
 
-def init_state(cfg: CocktailConfig) -> SchedulerState:
+def init_state(
+    cfg: "CocktailConfig | ShapeConfig",
+    params: Optional[SliceParams] = None,
+    seed: Optional[int] = None,
+) -> SchedulerState:
+    shape, params = split_config(cfg, params)
+    if seed is None:
+        seed = getattr(cfg, "seed", 0)
     return SchedulerState(
-        queues=QueueState.init(cfg.n_cu, cfg.n_ec, cfg.q0),
-        mults=Multipliers.zeros(cfg.n_cu, cfg.n_ec, cfg.q0, cfg.eps),
-        emp_mults=Multipliers.zeros(cfg.n_cu, cfg.n_ec, cfg.q0, cfg.eps),
+        queues=QueueState.init(shape.n_cu, shape.n_ec, params.q0),
+        mults=Multipliers.zeros(shape.n_cu, shape.n_ec, params.q0, params.eps),
+        emp_mults=Multipliers.zeros(shape.n_cu, shape.n_ec, params.q0, params.eps),
         t=jnp.asarray(0, jnp.int32),
         total_cost=jnp.asarray(0.0, jnp.float32),
         total_trained=jnp.asarray(0.0, jnp.float32),
-        uploaded=jnp.zeros((cfg.n_cu,), jnp.float32),
-        rng=jax.random.PRNGKey(cfg.seed),
+        uploaded=jnp.zeros((shape.n_cu,), jnp.float32),
+        rng=jax.random.PRNGKey(seed),
     )

@@ -1,4 +1,14 @@
-"""Dispatch for the greedy-assignment kernel."""
+"""Dispatch for the greedy-assignment kernel.
+
+This is the production entry point used by the core scheduler's plain-P1
+collection path (`repro.core.datasche._collect_plain`): the Pallas kernel on
+TPU, the (bit-identical) jnp sequential greedy elsewhere.
+
+Batch-compatible: weights with leading batch axes — e.g. a (K, N, M) fleet
+slice axis — are handled by vmapping the 2-D primitive, and calling the 2-D
+form under an outer ``jax.vmap`` works as usual (the ref is pure jnp; the
+Pallas call relies on JAX's pallas_call batching rule).
+"""
 from __future__ import annotations
 
 import jax
@@ -10,6 +20,10 @@ from .ref import greedy_assignment_ref
 def greedy_assignment(w, impl: str = "auto", interpret: bool = False):
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if w.ndim > 2:
+        return jax.vmap(
+            lambda ww: greedy_assignment(ww, impl=impl, interpret=interpret)
+        )(w)
     if impl == "pallas":
         return greedy_assignment_pallas(w, interpret=interpret)
     return greedy_assignment_ref(w)

@@ -24,3 +24,20 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     mp = max(1, min(model_parallel, n))
     return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def shard_leading_axis(tree, mesh, axis: str = "data"):
+    """Shard every leaf of a pytree along its leading axis over one mesh axis.
+
+    Used by the fleet engine to spread the K-slice batch axis of stacked
+    ``SliceParams`` / ``SchedulerState`` pytrees across devices
+    (``NamedSharding(mesh, P(axis, None, ...))``); all trailing axes stay
+    replicated. K must be divisible by the mesh axis size.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def put(leaf):
+        spec = PartitionSpec(axis, *([None] * (leaf.ndim - 1)))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree)

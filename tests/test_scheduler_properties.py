@@ -2,6 +2,9 @@
 import dataclasses
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 import jax
