@@ -1,0 +1,93 @@
+"""Ragged fleets: one padded program vs per-shape sub-fleets.
+
+Before ragged support, a mixed-shape slice population had to run as one
+compiled fleet PER distinct (N, M) — one program, one dispatch and one
+sequential device occupancy per shape group. `FleetEngine.from_ragged_configs`
+pads everything to the elementwise-max shape and runs ONE vmapped program.
+The padding is wasted FLOPs, so this benchmark records the actual trade:
+wall time of the padded fleet vs the summed per-shape sub-fleets at
+testbed-like scales.
+
+Measured on CPU the padded fleet lands at ~0.8-1.0x of the sub-fleets
+(padding waste roughly cancels the cross-group batching win, since each
+sub-fleet already batches internally); the structural benefits are 1 compiled
+program instead of n_shapes (compile time, program cache) and a single K axis
+to shard over a device mesh — per-shape sub-fleets serialise on one mesh.
+The `BENCH {...}` JSON rows (see ``common.emit_json``) track both sides so
+the trajectory is visible as kernels/pad-shape clustering improve.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import DS, CocktailConfig, FleetEngine
+
+from .common import emit, emit_json
+
+
+def _mixed_configs(per_shape: int) -> list[CocktailConfig]:
+    """A mixed regional population: small/medium/large slices, shared
+    pair_iters (required for ragged batching), heterogeneous params. Shapes
+    are testbed-scale, where per-slot cost is dispatch-dominated (the PR 1
+    sublinear-batching regime) and padding waste is moderate."""
+    shapes = [(4, 2), (6, 3), (8, 3)]
+    cfgs = []
+    for si, (n, m) in enumerate(shapes):
+        for s in range(per_shape):
+            cfgs.append(CocktailConfig(
+                n_cu=n, n_ec=m, pair_iters=20, seed=10 * si + s,
+                zeta=400.0 + 60.0 * ((si + s) % 5),
+                eps=0.1 + 0.02 * (s % 3),
+                f_base=tuple(8000.0 + 4000.0 * ((s + j) % 4) for j in range(m)),
+                c_base=50.0 + 25.0 * ((si + s) % 4),
+            ))
+    return cfgs
+
+
+def _timed_run(engines, slots: int, repeat: int) -> float:
+    """Mean wall seconds to run all engines for `slots` (compile excluded)."""
+    states = [eng.init() for eng in engines]
+    outs = [eng.run(slots, st) for eng, st in zip(engines, states)]  # warmup
+    for st, _ in outs:
+        jax.block_until_ready(st.queues.q)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        outs = [eng.run(slots, st) for eng, st in zip(engines, states)]
+        for st, _ in outs:
+            jax.block_until_ready(st.queues.q)
+    return (time.perf_counter() - t0) / repeat
+
+
+def ragged_scale(per_shape_counts=(1, 2, 4), slots: int = 8, repeat: int = 3):
+    rows = {}
+    for per_shape in per_shape_counts:
+        cfgs = _mixed_configs(per_shape)
+        padded = FleetEngine.from_ragged_configs(cfgs, DS)
+
+        groups: dict = {}
+        for c in cfgs:
+            groups.setdefault(c.shape, []).append(c)
+        subfleets = [FleetEngine.from_configs(g, DS) for g in groups.values()]
+
+        dt_pad = _timed_run([padded], slots, repeat)
+        dt_sub = _timed_run(subfleets, slots, repeat)
+
+        k = len(cfgs)
+        us_pad = dt_pad / slots * 1e6
+        us_sub = dt_sub / slots * 1e6
+        rows[k] = (us_pad, us_sub)
+        emit(f"ragged_scale/K{k}pad{padded.shape.n_cu}x{padded.shape.n_ec}",
+             us_pad, f"subfleets {us_sub:.0f}us")
+        emit_json("ragged_scale", k=k, n_shapes=len(groups),
+                  pad_n_cu=padded.shape.n_cu, pad_n_ec=padded.shape.n_ec,
+                  us_per_slot_padded=round(us_pad, 1),
+                  us_per_slot_subfleets=round(us_sub, 1),
+                  padded_speedup=round(us_sub / us_pad, 3))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    ragged_scale()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
               reduction vs CUFull)
   sched_scale scheduler wall-time scaling + matching kernel
   fleet_scale K-slice fleet engine scaling (BENCH JSON rows)
+  ragged_scale padded mixed-shape fleet vs per-shape sub-fleets (BENCH rows)
   roofline    aggregated dry-run roofline terms (run scripts/dryrun_sweep.sh
               first; missing artifacts are skipped gracefully)
 """
@@ -19,7 +20,8 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import fig7_accuracy, fleet_scale, paper_figs, roofline, sched_scale
+    from . import (fig7_accuracy, fleet_scale, paper_figs, ragged_scale,
+                   roofline, sched_scale)
 
     sections = [
         ("fig5", paper_figs.fig5_collection_evenness),
@@ -29,6 +31,7 @@ def main() -> None:
         ("fig9", paper_figs.fig9_unit_cost),
         ("sched_scale", sched_scale.sched_scale),
         ("fleet_scale", fleet_scale.fleet_scale),
+        ("ragged_scale", ragged_scale.ragged_scale),
         ("matching", sched_scale.matching_kernel_bench),
         ("roofline", roofline.roofline_table),
     ]

@@ -7,24 +7,29 @@ Public API:
   sample_network_state, framework_cost -- stochastic environment (Sec. II)
   step, run, AlgoSpec and the named specs (DS, LDS, NO_SDC, ...) -- Sec. III
   FleetEngine                          -- K-slice vmapped fleet scheduling
+                                          (ragged mixed-shape fleets via
+                                          from_ragged_configs + entity masks)
   metrics                              -- Sec. IV evaluation metrics
 """
 from .datasche import (ALL_SPECS, CU_FULL, DS, DS_EXACT, EC_FULL, EC_SELF,
                        GREEDY, LDS, NO_LSA, NO_SDC, NO_SLT, AlgoSpec,
                        SlotRecord, collection_weights, run, skew_degree,
                        stack_slot_records, step, training_weights)
-from .fleet import FleetEngine
+from .fleet import FleetEngine, ragged_pad_shape, trim_state
 from .network import framework_cost, sample_network_state
-from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
-                    QueueState, SchedulerState, ShapeConfig, SliceParams,
-                    init_state, split_config, stack_slice_params)
+from .types import (MASKED_WEIGHT, CocktailConfig, Decision, Multipliers,
+                    NetworkState, QueueState, SchedulerState, ShapeConfig,
+                    SliceParams, entity_masks, init_state, mask_pairs,
+                    split_config, stack_slice_params)
 
 __all__ = [
     "ALL_SPECS", "AlgoSpec", "CocktailConfig", "CU_FULL", "DS", "DS_EXACT",
     "Decision", "EC_FULL", "EC_SELF", "FleetEngine", "GREEDY", "LDS",
     "Multipliers", "NetworkState", "NO_LSA", "NO_SDC", "NO_SLT", "QueueState",
     "SchedulerState", "ShapeConfig", "SliceParams", "SlotRecord",
-    "collection_weights", "framework_cost", "init_state", "run",
+    "MASKED_WEIGHT", "collection_weights", "entity_masks", "framework_cost",
+    "init_state", "mask_pairs", "ragged_pad_shape", "run",
     "sample_network_state", "skew_degree", "split_config",
     "stack_slice_params", "stack_slot_records", "step", "training_weights",
+    "trim_state",
 ]

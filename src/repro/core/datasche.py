@@ -35,11 +35,13 @@ import numpy as np
 
 from . import matching, training_alloc
 from .network import framework_cost, sample_network_state
-from .types import (CocktailConfig, Decision, Multipliers, NetworkState,
-                    QueueState, SchedulerState, ShapeConfig, SliceParams,
-                    init_state, split_config)
+from .types import (MASKED_WEIGHT, CocktailConfig, Decision, Multipliers,
+                    NetworkState, QueueState, SchedulerState, ShapeConfig,
+                    SliceParams, entity_masks, init_state, mask_pairs,
+                    split_config)
 
 _TINY = 1e-9
+_NEG = MASKED_WEIGHT  # masked-entity weight (see types.mask_pairs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,9 +75,20 @@ ALL_SPECS = {s.name: s for s in
 # Weights (the per-slot dual prices entering P1'/P2')
 # --------------------------------------------------------------------------
 
-def collection_weights(net: NetworkState, mults: Multipliers) -> jax.Array:
-    """w_ij = d_ij (mu_i - eta_ij - c_ij); the P1' utility rate."""
-    return net.d * (mults.mu[:, None] - mults.eta - net.c)
+def collection_weights(net: NetworkState, mults: Multipliers,
+                       cu_mask: Optional[jax.Array] = None,
+                       ec_mask: Optional[jax.Array] = None) -> jax.Array:
+    """w_ij = d_ij (mu_i - eta_ij - c_ij); the P1' utility rate.
+
+    Ragged padding: entries whose CU or EC is masked are forced to 0 (the
+    sampler already zeroes d there, but a caller-supplied net need not), so
+    no collection policy can ever select them (they all require w > 0)."""
+    w = net.d * (mults.mu[:, None] - mults.eta - net.c)
+    if cu_mask is not None or ec_mask is not None:
+        cu = cu_mask if cu_mask is not None else jnp.ones_like(w[:, 0])
+        ec = ec_mask if ec_mask is not None else jnp.ones_like(w[0, :])
+        w = mask_pairs(w, cu, ec, fill=0.0)
+    return w
 
 
 def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
@@ -86,6 +99,10 @@ def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
     beta[i,j]    weight of x[i,j]   (eq. 18 x-coefficient)
     gamma[i,j,k] weight of y[i,j,k] (from queue R[i,j], trained at EC k)
                  = beta[i,k] + eta[i,j] - eta[i,k] - e[j,k]
+
+    Ragged padding: any entry touching a masked CU/EC is forced to the large
+    negative ``_NEG`` so every training solver (waterfill/coordinate-ascent/
+    knapsack) treats it as inactive and allocates exactly zero there.
     """
     _, params = split_config(cfg, params)
     phi = mults.phi if use_lsa else jnp.zeros_like(mults.phi)
@@ -95,6 +112,11 @@ def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
     beta = -net.p[None, :] + mults.eta - lam + phi + common[None, :]
     gamma = (beta[:, None, :] + mults.eta[:, :, None]
              - mults.eta[:, None, :] - net.e[None, :, :])
+    cu, ec = entity_masks(params)
+    beta = mask_pairs(beta, cu, ec)
+    gamma = jnp.where(
+        (cu[:, None, None] * ec[None, :, None] * ec[None, None, :]) > 0,
+        gamma, _NEG)
     return beta, gamma
 
 
@@ -103,7 +125,8 @@ def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
 # --------------------------------------------------------------------------
 
 def _collect_skew(shape, params, net, mults, queues, exact):
-    w = collection_weights(net, mults)
+    cu, ec = entity_masks(params)
+    w = collection_weights(net, mults, cu, ec)
     logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, _TINY)), -jnp.inf)
     if exact:
         from . import oracle
@@ -118,17 +141,22 @@ def _collect_plain(shape, params, net, mults, queues, exact):
     # first. Trace-time only (sys.modules hit after the first call).
     from ..kernels.matching import ops as matching_ops
 
+    cu, ec = entity_masks(params)
     w = collection_weights(net, mults)
     # Production path dispatches through the kernels layer: Pallas on TPU,
-    # the (identical) jnp greedy elsewhere; both vmap over a slice axis.
-    alpha = matching_ops.greedy_assignment(w)
+    # the (identical) jnp greedy elsewhere; both vmap over a slice axis and
+    # take the entity masks (masked pairs can never be assigned).
+    alpha = matching_ops.greedy_assignment(w, cu_mask=cu, ec_mask=ec)
     return alpha, alpha  # theta = 1 on the selected connection
 
 
 def _collect_cufull(shape, params, net, mults, queues, exact):
-    n = shape.n_cu
-    alpha = jnp.ones((shape.n_cu, shape.n_ec), jnp.float32)
-    theta = jnp.full((shape.n_cu, shape.n_ec), 1.0 / n, jnp.float32)
+    # Full connection over the *real* entities only: every real EC slot is
+    # shared evenly by the n_real connected CUs (theta = 1/n_real each).
+    cu, ec = entity_masks(params)
+    n_real = jnp.maximum(jnp.sum(cu), 1.0)
+    alpha = cu[:, None] * ec[None, :]
+    theta = alpha / n_real
     return alpha, theta
 
 
@@ -185,6 +213,13 @@ def _train_generic(shape, params, net, mults, queues, exact, use_lsa, solo_fn, p
     pair_vals = jnp.zeros((m, m), jnp.float32).at[pj_a, pk_a].set(pa.value)
     pair_vals = pair_vals + pair_vals.T
 
+    # Ragged padding: a masked EC must never be solo-selected nor paired (a
+    # (real, padded) pair would otherwise shadow the real EC's solo option —
+    # its value approximates the solo objective by a different solver).
+    _, ec = entity_masks(params)
+    val_solo = jnp.where(ec > 0, val_solo, _NEG)
+    pair_vals = mask_pairs(pair_vals, ec, ec)
+
     if exact:
         from . import oracle
         match = jnp.asarray(oracle.exact_pairing(np.asarray(val_solo), np.asarray(pair_vals)))
@@ -220,7 +255,9 @@ def _train_ecfull(shape, params, net, mults, queues, exact, use_lsa):
     budgets = net.f / params.rho
     x, y, _ = training_alloc.full_allocate(beta, gamma, queues.r, budgets, net.cap_d)
     m = shape.n_ec
-    return x, y, jnp.ones((m, m), jnp.float32) - jnp.eye(m, dtype=jnp.float32)
+    _, ec = entity_masks(params)
+    z = (jnp.ones((m, m), jnp.float32) - jnp.eye(m, dtype=jnp.float32))
+    return x, y, z * (ec[:, None] * ec[None, :])
 
 
 _TRAINERS = {"skew": _train_skew, "linear": _train_linear,
@@ -249,11 +286,16 @@ def update_multipliers(cfg: CocktailConfig | ShapeConfig, mults: Multipliers,
     tot_j = jnp.sum(trained_at, axis=0)
     d_hi, d_lo = params.delta_hi, params.delta_lo
 
-    mu = jnp.maximum(mults.mu + step * (net.arrivals - jnp.sum(served, axis=1)), 0.0)
-    eta = jnp.maximum(mults.eta + step * (served - dep_r), 0.0)
+    # Ragged padding: masked entities see zero flows, so their gradients are
+    # already zero; the explicit mask products pin the invariant (padded
+    # multipliers stay exactly 0) independent of upstream guarantees.
+    cu, ec = entity_masks(params)
+    link = cu[:, None] * ec[None, :]
+    mu = jnp.maximum(mults.mu + step * (net.arrivals - jnp.sum(served, axis=1)), 0.0) * cu
+    eta = jnp.maximum(mults.eta + step * (served - dep_r), 0.0) * link
     if use_lsa:
-        phi = jnp.maximum(mults.phi + step * (d_lo[:, None] * tot_j[None, :] - trained_at), 0.0)
-        lam = jnp.maximum(mults.lam + step * (trained_at - d_hi[:, None] * tot_j[None, :]), 0.0)
+        phi = jnp.maximum(mults.phi + step * (d_lo[:, None] * tot_j[None, :] - trained_at), 0.0) * link
+        lam = jnp.maximum(mults.lam + step * (trained_at - d_hi[:, None] * tot_j[None, :]), 0.0) * link
     else:
         phi, lam = mults.phi, mults.lam
     return Multipliers(mu=mu, eta=eta, phi=phi, lam=lam)

@@ -16,9 +16,14 @@ Axis conventions (documented in ROADMAP.md):
     ``launch.mesh.shard_leading_axis`` (NamedSharding, trailing axes
     replicated)
 
-Constraints: all slices of a fleet share one ``ShapeConfig`` (N, M and solver
-iteration counts are compile-time) and one ``AlgoSpec``; ``exact`` specs are
-host-side and cannot be vmapped. Run several fleets for mixed shapes.
+Constraints: all slices of a fleet run at one *compiled* ``ShapeConfig`` (N,
+M and solver iteration counts are compile-time) and one ``AlgoSpec``;
+``exact`` specs are host-side and cannot be vmapped. Slices with different
+*true* (N, M) can still share a fleet via :meth:`FleetEngine.from_ragged_configs`:
+each slice is zero-padded to the elementwise-max shape and its
+``SliceParams`` masks (``cu_mask``/``ec_mask``) make every policy ignore the
+padding, so the padded slice reproduces its standalone run on the real block
+(tests/test_ragged_fleet.py).
 """
 from __future__ import annotations
 
@@ -30,13 +35,50 @@ import jax
 import jax.numpy as jnp
 
 from .datasche import AlgoSpec, DS, SlotRecord, step
-from .types import (CocktailConfig, Decision, SchedulerState, ShapeConfig,
-                    SliceParams, init_state, split_config, stack_slice_params)
+from .types import (CocktailConfig, Decision, Multipliers, QueueState,
+                    SchedulerState, ShapeConfig, SliceParams, init_state,
+                    split_config, stack_slice_params)
 
 
 def unstack(tree, k: int):
-    """Extract slice k from a stacked (K, ...) pytree (state, params, recs)."""
+    """Extract slice k from a stacked (K, ...) pytree (state, params)."""
     return jax.tree.map(lambda l: l[k], tree)
+
+
+def slice_records(recs: SlotRecord, k: int) -> SlotRecord:
+    """Slice k's (T,) per-slot trace out of time-major (T, K) fleet records."""
+    return jax.tree.map(lambda l: l[:, k], recs)
+
+
+def ragged_pad_shape(shapes: Sequence[ShapeConfig]) -> ShapeConfig:
+    """The common compiled shape of a ragged fleet: elementwise max over the
+    entity axes. Solver iteration counts are control flow, not padding, so
+    they must agree across slices."""
+    iters = {s.pair_iters for s in shapes}
+    if len(iters) != 1:
+        raise ValueError(f"ragged fleet slices must share pair_iters, got {iters}")
+    return ShapeConfig(n_cu=max(s.n_cu for s in shapes),
+                      n_ec=max(s.n_ec for s in shapes),
+                      pair_iters=iters.pop())
+
+
+def trim_state(state: SchedulerState, shape: ShapeConfig) -> SchedulerState:
+    """Drop the ragged padding of one slice's state: slice every entity axis
+    down to the true (N, M). Padded entries are exactly zero by the mask
+    invariants, so this is lossless."""
+    n, m = shape.n_cu, shape.n_ec
+
+    def trim_mults(mu: Multipliers) -> Multipliers:
+        return Multipliers(mu=mu.mu[:n], eta=mu.eta[:n, :m],
+                           phi=mu.phi[:n, :m], lam=mu.lam[:n, :m])
+
+    return state._replace(
+        queues=QueueState(q=state.queues.q[:n], r=state.queues.r[:n, :m],
+                          omega=state.queues.omega[:n, :m]),
+        mults=trim_mults(state.mults),
+        emp_mults=trim_mults(state.emp_mults),
+        uploaded=state.uploaded[:n],
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2))
@@ -69,6 +111,9 @@ class FleetEngine:
     params: SliceParams  # stacked, leading axis K
     n_slices: int
     seeds: tuple[int, ...]
+    # Per-slice *true* shapes (== (shape,) * K for non-ragged fleets). Only
+    # metadata: used by slice_state to trim the padding back off.
+    slice_shapes: Optional[tuple[ShapeConfig, ...]] = None
 
     def __post_init__(self):
         if self.spec.exact:
@@ -83,13 +128,39 @@ class FleetEngine:
         shapes = {c.shape for c in configs}
         if len(shapes) != 1:
             raise ValueError(f"fleet slices must share one ShapeConfig, got {shapes}; "
-                             "run mixed shapes as separate fleets")
+                             "pad mixed shapes with from_ragged_configs")
         return cls(
             shape=configs[0].shape,
             spec=spec,
             params=stack_slice_params([c.params for c in configs]),
             n_slices=len(configs),
             seeds=tuple(int(c.seed) for c in configs),
+            slice_shapes=tuple(c.shape for c in configs),
+        )
+
+    @classmethod
+    def from_ragged_configs(cls, configs: Sequence[CocktailConfig],
+                            spec: AlgoSpec = DS) -> "FleetEngine":
+        """Batch slices of *different* true (N, M) into one compiled program.
+
+        Every slice is zero-padded to the elementwise-max ``ShapeConfig`` and
+        carries ``cu_mask``/``ec_mask`` marking its real entities; masked
+        entities get zero capacity/arrivals and -inf weights so collection,
+        pairing and multiplier updates provably ignore them. Per-slot
+        ``SlotRecord`` scalars therefore sum over real entities only, and
+        each slice's trace matches its standalone unpadded ``run()``.
+        """
+        if not configs:
+            raise ValueError("need at least one slice config")
+        pad = ragged_pad_shape([c.shape for c in configs])
+        return cls(
+            shape=pad,
+            spec=spec,
+            params=stack_slice_params(
+                [SliceParams.from_config(c, pad_shape=pad) for c in configs]),
+            n_slices=len(configs),
+            seeds=tuple(int(c.seed) for c in configs),
+            slice_shapes=tuple(c.shape for c in configs),
         )
 
     @classmethod
@@ -112,8 +183,15 @@ class FleetEngine:
         return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
 
     def slice_state(self, state: SchedulerState, k: int) -> SchedulerState:
-        """Slice k's SchedulerState (for per-slice metrics.summary etc.)."""
-        return unstack(state, k)
+        """Slice k's SchedulerState (for per-slice metrics.summary etc.).
+
+        Ragged fleets: the padding is trimmed back off, so the result has the
+        slice's true (N, M) and drops straight into shape-aware consumers
+        (metrics.summary against the original CocktailConfig)."""
+        sk = unstack(state, k)
+        if self.slice_shapes is not None and self.slice_shapes[k] != self.shape:
+            sk = trim_state(sk, self.slice_shapes[k])
+        return sk
 
     # -- execution --------------------------------------------------------
 

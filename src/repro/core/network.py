@@ -12,6 +12,14 @@ We reproduce the *shape* of those curves with parametric samplers:
              right-skewed with a wide body)
   workload ~ Beta(2, 5) centred low with occasional spikes        (Fig. 4c)
 
+Sampling is **entity-keyed**: every matrix/vector element draws from its own
+``fold_in(fold_in(key, i), j)`` key, so the value at (i, j) depends only on
+the slot key and the entity indices — never on the array shape. This makes
+the generator padding-invariant: a slice zero-padded to a larger
+``ShapeConfig`` (ragged fleets) sees bit-identical draws on its real block,
+and the ``cu_mask`` / ``ec_mask`` in ``SliceParams`` zero out capacity and
+arrivals of padded entities so they can never carry traffic or work.
+
 Everything is jittable; one call produces the full NetworkState for slot t.
 """
 from __future__ import annotations
@@ -22,21 +30,50 @@ import jax
 import jax.numpy as jnp
 
 from .types import (CocktailConfig, NetworkState, ShapeConfig, SliceParams,
-                    split_config)
+                    entity_masks, split_config)
 
 
-def _traffic(key: jax.Array, shape, t: jax.Array) -> jax.Array:
+def _fold_vec(key: jax.Array, n: int) -> jax.Array:
+    """(n,) per-entity keys; element i depends only on (key, i)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def _fold_grid(key: jax.Array, n: int, m: int) -> jax.Array:
+    """(n, m) per-entity-pair keys; element (i, j) depends only on (key, i, j)."""
+    return jax.vmap(lambda kr: _fold_vec(kr, m))(_fold_vec(key, n))
+
+
+def _uniform_vec(key, n, minval=0.0, maxval=1.0):
+    draw = lambda k: jax.random.uniform(k, (), minval=minval, maxval=maxval)
+    return jax.vmap(draw)(_fold_vec(key, n))
+
+
+def _uniform_grid(key, n, m, minval=0.0, maxval=1.0):
+    draw = lambda k: jax.random.uniform(k, (), minval=minval, maxval=maxval)
+    return jax.vmap(jax.vmap(draw))(_fold_grid(key, n, m))
+
+
+def _beta_vec(key, n, a, b):
+    return jax.vmap(lambda k: jax.random.beta(k, a, b))(_fold_vec(key, n))
+
+
+def _beta_grid(key, n, m, a, b):
+    return jax.vmap(jax.vmap(lambda k: jax.random.beta(k, a, b)))(
+        _fold_grid(key, n, m))
+
+
+def _traffic(key: jax.Array, n: int, m: int, t: jax.Array) -> jax.Array:
     """Normalized traffic in [0, 0.95]: diurnal base + Beta(2,4) noise."""
     k1, k2 = jax.random.split(key)
-    phase = jax.random.uniform(k1, shape, minval=0.0, maxval=2 * jnp.pi)
+    phase = _uniform_grid(k1, n, m, minval=0.0, maxval=2 * jnp.pi)
     diurnal = 0.35 + 0.3 * jnp.sin(2 * jnp.pi * t / 288.0 + phase)  # 5-min slots
-    noise = jax.random.beta(k2, 2.0, 4.0, shape) * 0.4
+    noise = _beta_grid(k2, n, m, 2.0, 4.0) * 0.4
     return jnp.clip(diurnal + noise, 0.0, 0.95)
 
 
-def _workload(key: jax.Array, shape) -> jax.Array:
+def _workload(key: jax.Array, m: int) -> jax.Array:
     """Normalized co-tenant workload in [0, 0.9] (Beta(2,5): mostly low)."""
-    return jnp.clip(jax.random.beta(key, 2.0, 5.0, shape), 0.0, 0.9)
+    return jnp.clip(_beta_vec(key, m, 2.0, 5.0), 0.0, 0.9)
 
 
 def sample_network_state(
@@ -51,32 +88,37 @@ def sample_network_state(
     # (paper Sec. IV-C derives it from node distance); we draw a static-ish
     # multiplier from the key hash of the pair so links are persistently
     # heterogeneous across slots.
-    link_het = 0.5 + jax.random.uniform(jax.random.fold_in(kh, 0), (n, m))
-    d = params.d_base * link_het * (1.0 - _traffic(kd, (n, m), t))
+    link_het = 0.5 + _uniform_grid(jax.random.fold_in(kh, 0), n, m)
+    d = params.d_base * link_het * (1.0 - _traffic(kd, n, m, t))
 
-    ec_het = 0.5 + jax.random.uniform(jax.random.fold_in(kh, 1), (m, m))
-    cap_d = params.cap_d_base * ec_het * (1.0 - _traffic(kD, (m, m), t))
+    ec_het = 0.5 + _uniform_grid(jax.random.fold_in(kh, 1), m, m)
+    cap_d = params.cap_d_base * ec_het * (1.0 - _traffic(kD, m, m, t))
     cap_d = 0.5 * (cap_d + cap_d.T)
     cap_d = cap_d * (1.0 - jnp.eye(m))
 
-    f = params.f_base * (1.0 - _workload(kf, (m,)))
+    f = params.f_base * (1.0 - _workload(kf, m))
 
     # Unit costs: baseline * (1 + U(0,1)) - "dynamics following 0-1 uniform".
-    c = params.c_base * (1.0 + jax.random.uniform(kc, (n, m)))
-    e = params.e_base * (1.0 + jax.random.uniform(ke, (m, m)))
+    c = params.c_base * (1.0 + _uniform_grid(kc, n, m))
+    e = params.e_base * (1.0 + _uniform_grid(ke, m, m))
     e = 0.5 * (e + e.T) * (1.0 - jnp.eye(m))
-    p = params.p_base * (1.0 + jax.random.uniform(kp, (m,)))
+    p = params.p_base * (1.0 + _uniform_vec(kp, m))
 
-    arrivals = params.zeta * (0.5 + jax.random.uniform(ka, (n,)))  # E[A_i] = zeta_i
+    arrivals = params.zeta * (0.5 + _uniform_vec(ka, n))  # E[A_i] = zeta_i
 
+    # Ragged padding: masked entities have no capacity, generate no data and
+    # can do no work; unit costs stay finite (they only ever multiply zeros).
+    cu_mask, ec_mask = entity_masks(params)
+    link_mask = cu_mask[:, None] * ec_mask[None, :]
+    pair_mask = ec_mask[:, None] * ec_mask[None, :]
     return NetworkState(
-        d=d.astype(jnp.float32),
-        cap_d=cap_d.astype(jnp.float32),
-        f=f.astype(jnp.float32),
+        d=(d * link_mask).astype(jnp.float32),
+        cap_d=(cap_d * pair_mask).astype(jnp.float32),
+        f=(f * ec_mask).astype(jnp.float32),
         c=c.astype(jnp.float32),
         e=e.astype(jnp.float32),
         p=p.astype(jnp.float32),
-        arrivals=arrivals.astype(jnp.float32),
+        arrivals=(arrivals * cu_mask).astype(jnp.float32),
     )
 
 

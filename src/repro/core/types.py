@@ -49,6 +49,14 @@ class SliceParams(NamedTuple):
 
     Every leaf is a jnp array so a fleet of K slices is just this pytree with
     a leading K axis (``stack_slice_params``). Scalars are rank-0 float32.
+
+    ``cu_mask`` / ``ec_mask`` support ragged fleets: a slice whose true shape
+    is smaller than the compiled ``ShapeConfig`` is zero-padded, with masks
+    marking the real entities (1.0) vs the padding (0.0). Masked entities get
+    zero capacity/arrivals and -inf solver weights, so every policy provably
+    ignores them and the padded program reproduces the unpadded one on the
+    real block. ``from_config`` emits all-ones masks, so existing call sites
+    are unchanged.
     """
 
     zeta: jax.Array  # (N,) average data generation rate per CU
@@ -65,26 +73,65 @@ class SliceParams(NamedTuple):
     c_base: jax.Array  # () unit CU->EC transmission cost
     e_base: jax.Array  # () unit EC<->EC transmission cost
     p_base: jax.Array  # () unit computing cost
+    cu_mask: jax.Array = None  # (N,) 1.0 = real CU, 0.0 = ragged padding
+    ec_mask: jax.Array = None  # (M,) 1.0 = real EC, 0.0 = ragged padding
 
     @classmethod
-    def from_config(cls, cfg: "CocktailConfig") -> "SliceParams":
+    def from_config(cls, cfg: "CocktailConfig",
+                    pad_shape: "Optional[ShapeConfig]" = None) -> "SliceParams":
+        """Build params for ``cfg``; with ``pad_shape`` the entity axes are
+        zero-padded to (pad_shape.n_cu, pad_shape.n_ec) and the masks mark the
+        real block, so the slice can join a ragged fleet compiled at the pad
+        shape."""
         f32 = lambda v: jnp.asarray(v, jnp.float32)
+        n, m = cfg.n_cu, cfg.n_ec
+        n_pad = n if pad_shape is None else pad_shape.n_cu
+        m_pad = m if pad_shape is None else pad_shape.n_ec
+        if n_pad < n or m_pad < m:
+            raise ValueError(f"pad shape ({n_pad}, {m_pad}) smaller than "
+                             f"true shape ({n}, {m})")
+        pad_n = lambda v: jnp.pad(f32(v), (0, n_pad - n))
+        pad_m = lambda v: jnp.pad(f32(v), (0, m_pad - m))
         return cls(
-            zeta=f32(cfg.zeta_vec),
-            proportions=f32(cfg.proportions),
-            delta_lo=f32(cfg.delta_lo),
-            delta_hi=f32(cfg.delta_hi),
+            zeta=pad_n(cfg.zeta_vec),
+            proportions=pad_n(cfg.proportions),
+            delta_lo=pad_n(cfg.delta_lo),
+            delta_hi=pad_n(cfg.delta_hi),
             eps=f32(cfg.eps),
             rho=f32(cfg.rho),
             q0=f32(cfg.q0),
             sigma0=f32(cfg.sigma0),
             d_base=f32(cfg.d_base),
             cap_d_base=f32(cfg.cap_d_base),
-            f_base=jnp.broadcast_to(f32(cfg.f_base), (cfg.n_ec,)),
+            f_base=pad_m(jnp.broadcast_to(f32(cfg.f_base), (m,))),
             c_base=f32(cfg.c_base),
             e_base=f32(cfg.e_base),
             p_base=f32(cfg.p_base),
+            cu_mask=(jnp.arange(n_pad) < n).astype(jnp.float32),
+            ec_mask=(jnp.arange(m_pad) < m).astype(jnp.float32),
         )
+
+
+def entity_masks(params: SliceParams) -> tuple[jax.Array, jax.Array]:
+    """(cu_mask (N,), ec_mask (M,)) of a params pytree, defaulting to all-ones
+    for params built before the mask fields existed (hand-constructed)."""
+    cu = params.cu_mask if params.cu_mask is not None else jnp.ones_like(params.zeta)
+    ec = params.ec_mask if params.ec_mask is not None else jnp.ones_like(params.f_base)
+    return cu, ec
+
+
+# Weight of anything touching a ragged-padded entity: large negative so no
+# greedy/knapsack/waterfill policy ever selects it, but finite so products
+# with the (exactly zero) padded allocations stay 0 instead of NaN.
+MASKED_WEIGHT = -1e30
+
+
+def mask_pairs(a: jax.Array, row_mask: jax.Array, col_mask: jax.Array,
+               fill: float = MASKED_WEIGHT) -> jax.Array:
+    """Force entries of a (..., R, C) array whose row or column entity is
+    masked to ``fill`` — the one place the ragged-padding mask product is
+    spelled out (weights use MASKED_WEIGHT, capacities use 0)."""
+    return jnp.where((row_mask[..., :, None] * col_mask[..., None, :]) > 0, a, fill)
 
 
 def stack_slice_params(params: list["SliceParams"] | tuple["SliceParams", ...]) -> "SliceParams":
@@ -249,10 +296,17 @@ def init_state(
     shape, params = split_config(cfg, params)
     if seed is None:
         seed = getattr(cfg, "seed", 0)
+    cu_mask, _ = entity_masks(params)
+    queues = QueueState.init(shape.n_cu, shape.n_ec, params.q0)
+    # Ragged padding: masked CUs carry no backlog and a zero queue price, so
+    # scalar records (q_backlog, ...) sum only over real entities.
+    queues = queues._replace(q=queues.q * cu_mask)
+    mults = Multipliers.zeros(shape.n_cu, shape.n_ec, params.q0, params.eps)
+    mults = mults._replace(mu=mults.mu * cu_mask)
     return SchedulerState(
-        queues=QueueState.init(shape.n_cu, shape.n_ec, params.q0),
-        mults=Multipliers.zeros(shape.n_cu, shape.n_ec, params.q0, params.eps),
-        emp_mults=Multipliers.zeros(shape.n_cu, shape.n_ec, params.q0, params.eps),
+        queues=queues,
+        mults=mults,
+        emp_mults=mults,
         t=jnp.asarray(0, jnp.int32),
         total_cost=jnp.asarray(0.0, jnp.float32),
         total_trained=jnp.asarray(0.0, jnp.float32),

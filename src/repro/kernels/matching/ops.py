@@ -8,16 +8,33 @@ Batch-compatible: weights with leading batch axes — e.g. a (K, N, M) fleet
 slice axis — are handled by vmapping the 2-D primitive, and calling the 2-D
 form under an outer ``jax.vmap`` works as usual (the ref is pure jnp; the
 Pallas call relies on JAX's pallas_call batching rule).
+
+Mask-aware (ragged fleets): optional ``cu_mask`` (..., N) / ``ec_mask``
+(..., M) entity masks force the weight of any (CU, EC) pair touching a
+padded entity to a large negative before dispatch, so neither backend can
+ever assign it. Masking happens here, once, so the Pallas kernel and the
+jnp ref stay mask-free and bit-identical to each other.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import jax.numpy as jnp
+
+from repro.core.types import mask_pairs
 
 from .kernel import greedy_assignment_pallas
 from .ref import greedy_assignment_ref
 
 
-def greedy_assignment(w, impl: str = "auto", interpret: bool = False):
+def greedy_assignment(w, cu_mask: Optional[jax.Array] = None,
+                      ec_mask: Optional[jax.Array] = None,
+                      impl: str = "auto", interpret: bool = False):
+    if cu_mask is not None or ec_mask is not None:
+        cu = cu_mask if cu_mask is not None else jnp.ones_like(w[..., :, 0])
+        ec = ec_mask if ec_mask is not None else jnp.ones_like(w[..., 0, :])
+        w = mask_pairs(w, cu, ec)
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if w.ndim > 2:

@@ -76,13 +76,15 @@ def test_k3_heterogeneous_matches_sequential():
 
 def test_single_program_runs_k8():
     """K>=8 heterogeneous fleet executes inside one jitted scan (acceptance
-    criterion); every slice makes progress and stays finite."""
+    criterion); every slice makes progress and stays finite. 20 slots: the
+    onset of training is realization-dependent (a low-eps slice can spend the
+    first ~10 slots only collecting)."""
     cfgs = [dataclasses.replace(BASE, seed=s, zeta=300.0 + 60.0 * s,
                                 eps=0.08 + 0.02 * (s % 3))
             for s in range(8)]
     eng = FleetEngine.from_configs(cfgs, DS)
-    st, recs = eng.run(10)
-    assert recs.cost.shape == (10, 8)
+    st, recs = eng.run(20)
+    assert recs.cost.shape == (20, 8)
     assert np.isfinite(np.asarray(recs.cost)).all()
     assert (np.asarray(st.total_trained) > 0).all()
     assert np.isfinite(np.asarray(st.queues.q)).all()

@@ -1,0 +1,68 @@
+"""Golden-trace regression: a committed fixed-seed run() trace for the paper
+testbed config. Kernel/solver refactors that change the schedule's numerics
+(beyond float reassociation noise) fail loudly here instead of silently
+drifting the reproduction.
+
+Regenerate (after an INTENTIONAL numerics change, with the diff reviewed):
+
+    PYTHONPATH=src python tests/test_golden_trace.py --regen
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import DS, LDS, CocktailConfig, run
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "testbed_trace.json"
+SLOTS = 16
+
+# Paper Sec. IV-A testbed scale (see benchmarks/common.testbed_config; inlined
+# so the test suite does not depend on the benchmarks package).
+CFG = CocktailConfig(n_cu=6, n_ec=3, delta=0.02, eps=0.1, q0=5000.0,
+                     zeta=500.0, d_base=2000.0, cap_d_base=8000.0,
+                     f_base=(8000.0, 20000.0, 8000.0),
+                     c_base=50.0, e_base=50.0, p_base=200.0,
+                     pair_iters=30, seed=0)
+
+
+def _trace(spec):
+    state, recs = run(CFG, spec, SLOTS)
+    return {
+        "cost": np.asarray(recs.cost, np.float64).tolist(),
+        "trained": np.asarray(recs.trained, np.float64).tolist(),
+        "q_backlog": np.asarray(recs.q_backlog, np.float64).tolist(),
+        "r_backlog": np.asarray(recs.r_backlog, np.float64).tolist(),
+        "skew": np.asarray(recs.skew, np.float64).tolist(),
+        "total_cost": float(state.total_cost),
+        "total_trained": float(state.total_trained),
+        "final_q": np.asarray(state.queues.q, np.float64).tolist(),
+    }
+
+
+def _traces():
+    return {spec.name: _trace(spec) for spec in (DS, LDS)}
+
+
+@pytest.mark.parametrize("spec", [DS, LDS], ids=lambda s: s.name)
+def test_trace_matches_golden(spec):
+    assert GOLDEN.exists(), "golden trace missing; run with --regen (see docstring)"
+    golden = json.loads(GOLDEN.read_text())[spec.name]
+    current = _trace(spec)
+    for key, want in golden.items():
+        got = current[key]
+        # tight but not bit-exact: float32 reassociation across backends/XLA
+        # versions; real solver drift is orders of magnitude larger
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-3, err_msg=key)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" not in sys.argv:
+        sys.exit("refusing to overwrite the golden trace without --regen")
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(_traces(), indent=1) + "\n")
+    print(f"wrote {GOLDEN}")

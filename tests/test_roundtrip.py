@@ -1,0 +1,119 @@
+"""Round-trip coverage for the config/params plumbing: split_config,
+stack_slice_params / fleet.unstack, and the mask fields added for ragged
+fleets — previously exercised only indirectly through run()."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DS, CocktailConfig, ShapeConfig, SliceParams,
+                        entity_masks, init_state, split_config,
+                        stack_slice_params)
+from repro.core.fleet import trim_state, unstack
+
+CFG = CocktailConfig(n_cu=5, n_ec=3, eps=0.2, pair_iters=12, seed=9,
+                     zeta=np.array([100.0, 200.0, 300.0, 400.0, 500.0]),
+                     f_base=(9000.0, 15000.0, 21000.0))
+
+
+def _assert_params_equal(a: SliceParams, b: SliceParams):
+    for field in SliceParams._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=field)
+
+
+def test_split_config_cocktail():
+    shape, params = split_config(CFG)
+    assert shape == ShapeConfig(n_cu=5, n_ec=3, pair_iters=12)
+    _assert_params_equal(params, CFG.params)
+    # masks are materialized all-ones at the true shape
+    np.testing.assert_array_equal(np.asarray(params.cu_mask), np.ones(5))
+    np.testing.assert_array_equal(np.asarray(params.ec_mask), np.ones(3))
+
+
+def test_split_config_explicit_pair_passthrough():
+    shape, params = split_config(CFG)
+    shape2, params2 = split_config(shape, params)
+    assert shape2 is shape and params2 is params
+    # explicit params override the config's own
+    other = dataclasses.replace(CFG, eps=0.5).params
+    _, p3 = split_config(CFG, other)
+    assert float(p3.eps) == 0.5
+
+
+def test_split_config_shape_without_params_raises():
+    with pytest.raises(TypeError):
+        split_config(CFG.shape)
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_stack_unstack_roundtrip(k):
+    cfgs = [dataclasses.replace(CFG, seed=s, eps=0.1 + 0.05 * s)
+            for s in range(k)]
+    stacked = stack_slice_params([c.params for c in cfgs])
+    # every leaf gained exactly one leading K axis — masks included
+    for field in SliceParams._fields:
+        leaf = getattr(stacked, field)
+        single = getattr(cfgs[0].params, field)
+        assert leaf.shape == (k,) + single.shape, field
+    for s, cfg in enumerate(cfgs):
+        _assert_params_equal(unstack(stacked, s), cfg.params)
+
+
+def test_stack_unstack_roundtrip_padded():
+    pad = ShapeConfig(n_cu=8, n_ec=4, pair_iters=12)
+    small = SliceParams.from_config(CFG, pad_shape=pad)
+    big = SliceParams.from_config(
+        dataclasses.replace(CFG, n_cu=8, n_ec=4, zeta=500.0,
+                            f_base=10000.0), pad_shape=pad)
+    stacked = stack_slice_params([small, big])
+    _assert_params_equal(unstack(stacked, 0), small)
+    _assert_params_equal(unstack(stacked, 1), big)
+    np.testing.assert_array_equal(np.asarray(stacked.cu_mask),
+                                  [[1] * 5 + [0] * 3, [1] * 8])
+
+
+def test_padded_params_real_block_matches_unpadded():
+    pad = ShapeConfig(n_cu=9, n_ec=5, pair_iters=12)
+    p = SliceParams.from_config(CFG, pad_shape=pad)
+    ref = CFG.params
+    for field in ("zeta", "proportions", "delta_lo", "delta_hi"):
+        np.testing.assert_array_equal(np.asarray(getattr(p, field))[:5],
+                                      np.asarray(getattr(ref, field)),
+                                      err_msg=field)
+        assert (np.asarray(getattr(p, field))[5:] == 0).all(), field
+    np.testing.assert_array_equal(np.asarray(p.f_base)[:3],
+                                  np.asarray(ref.f_base))
+    assert (np.asarray(p.f_base)[3:] == 0).all()
+    cu, ec = entity_masks(p)
+    np.testing.assert_array_equal(np.asarray(cu), [1] * 5 + [0] * 4)
+    np.testing.assert_array_equal(np.asarray(ec), [1] * 3 + [0] * 2)
+
+
+def test_entity_masks_default_all_ones():
+    # hand-built params without masks (pre-ragged pytrees) default to ones
+    p = CFG.params._replace(cu_mask=None, ec_mask=None)
+    cu, ec = entity_masks(p)
+    np.testing.assert_array_equal(np.asarray(cu), np.ones(5))
+    np.testing.assert_array_equal(np.asarray(ec), np.ones(3))
+
+
+def test_trim_state_inverts_padded_init():
+    """init at the pad shape, trimmed, equals init at the true shape."""
+    pad = ShapeConfig(n_cu=8, n_ec=4, pair_iters=12)
+    padded = init_state(pad, SliceParams.from_config(CFG, pad_shape=pad),
+                        seed=CFG.seed)
+    ref = init_state(CFG)
+    tr = trim_state(padded, CFG.shape)
+    np.testing.assert_array_equal(np.asarray(tr.queues.q),
+                                  np.asarray(ref.queues.q))
+    np.testing.assert_array_equal(np.asarray(tr.queues.r),
+                                  np.asarray(ref.queues.r))
+    np.testing.assert_array_equal(np.asarray(tr.mults.mu),
+                                  np.asarray(ref.mults.mu))
+    np.testing.assert_array_equal(np.asarray(tr.uploaded),
+                                  np.asarray(ref.uploaded))
+    # padded region carries no backlog and no queue price
+    assert (np.asarray(padded.queues.q)[5:] == 0).all()
+    assert (np.asarray(padded.mults.mu)[5:] == 0).all()

@@ -14,6 +14,7 @@ from repro.core import (DS, LDS, CocktailConfig, init_state, run, step,
                         training_weights, sample_network_state)
 
 
+@pytest.mark.tier2  # recompiles per random (n_cu, n_ec): heaviest in the suite
 @given(st.integers(0, 10_000), st.integers(2, 8), st.integers(2, 4))
 @settings(max_examples=8, deadline=None)
 def test_invariants_random_topologies(seed, n_cu, n_ec):
