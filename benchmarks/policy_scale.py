@@ -1,0 +1,97 @@
+"""Mixed-policy fleets: one switch-dispatch program vs per-spec sub-fleets.
+
+Before branch-free dispatch, a slice population mixing AlgoSpecs (the staged
+rollout: skew-aware production next to greedy / no-LSA canaries) had to run
+one compiled fleet PER spec. ``FleetEngine.from_jobs`` runs the whole mix in
+ONE program: policy choice is ``lax.switch`` over the indexed policy tables.
+The structural win is 1 compiled program instead of n_specs and a single
+shardable K axis; the cost is that every slot carries all policy branches and
+the always-on learning-aid virtual path. This benchmark records both sides —
+wall-clock per slot and compile counts vs K and n_specs — as ``BENCH {...}``
+JSON rows so the trade is tracked across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import DS, LDS, NO_LSA, NO_SDC, CocktailConfig, FleetEngine, SliceJob
+from repro.core.fleet import _fleet_scan
+
+from .common import emit, emit_json
+
+SPEC_POOL = (DS, NO_SDC, NO_LSA, LDS)
+
+
+def _mixed_jobs(k: int, n_specs: int) -> list[SliceJob]:
+    """K slices cycling over n_specs distinct AlgoSpecs, heterogeneous params
+    at testbed-like shape (dispatch-dominated, the PR 1 batching regime)."""
+    specs = SPEC_POOL[:n_specs]
+    return [
+        SliceJob(
+            CocktailConfig(
+                n_cu=8, n_ec=3, pair_iters=20, seed=s,
+                zeta=400.0 + 60.0 * (s % 5), eps=0.1 + 0.02 * (s % 3),
+                f_base=tuple(8000.0 + 4000.0 * ((s + j) % 4) for j in range(3)),
+            ),
+            specs[s % n_specs], name=f"slice-{s}")
+        for s in range(k)
+    ]
+
+
+def _timed_run(engines, slots: int, repeat: int) -> float:
+    """Mean wall seconds to run all engines for `slots` (compile excluded)."""
+    states = [eng.init() for eng in engines]
+    outs = [eng.run(slots, st) for eng, st in zip(engines, states)]  # warmup
+    for st, _ in outs:
+        jax.block_until_ready(st.queues.q)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        outs = [eng.run(slots, st) for eng, st in zip(engines, states)]
+        for st, _ in outs:
+            jax.block_until_ready(st.queues.q)
+    return (time.perf_counter() - t0) / repeat
+
+
+def policy_scale(ks=(4, 8, 16), n_specs_list=(2, 4), slots: int = 8,
+                 repeat: int = 3):
+    rows = {}
+    for n_specs in n_specs_list:
+        for k in ks:
+            jobs = _mixed_jobs(k, n_specs)
+
+            # Compile counts must not leak between rows (the jit cache is
+            # process-global and keyed on (shape, spec, n_slots) only).
+            _fleet_scan._clear_cache()
+            cache0 = _fleet_scan._cache_size()
+            switched = FleetEngine.from_jobs(jobs)
+            dt_switch = _timed_run([switched], slots, repeat)
+            programs_switched = _fleet_scan._cache_size() - cache0
+
+            groups: dict = {}
+            for j in jobs:
+                groups.setdefault(j.spec, []).append(j)
+            _fleet_scan._clear_cache()
+            cache0 = _fleet_scan._cache_size()
+            subfleets = [FleetEngine.from_jobs(g) for g in groups.values()]
+            dt_sub = _timed_run(subfleets, slots, repeat)
+            programs_sub = _fleet_scan._cache_size() - cache0
+
+            us_switch = dt_switch / slots * 1e6
+            us_sub = dt_sub / slots * 1e6
+            rows[(k, n_specs)] = (us_switch, us_sub)
+            emit(f"policy_scale/K{k}specs{n_specs}", us_switch,
+                 f"subfleets {us_sub:.0f}us ({programs_sub} programs)")
+            emit_json("policy_scale", k=k, n_specs=n_specs, slots=slots,
+                      us_per_slot_switched=round(us_switch, 1),
+                      us_per_slot_subfleets=round(us_sub, 1),
+                      programs_switched=programs_switched,
+                      programs_subfleets=programs_sub,
+                      switched_speedup=round(us_sub / us_switch, 3))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    policy_scale()

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   sched_scale scheduler wall-time scaling + matching kernel
   fleet_scale K-slice fleet engine scaling (BENCH JSON rows)
   ragged_scale padded mixed-shape fleet vs per-shape sub-fleets (BENCH rows)
+  policy_scale mixed-policy switch-dispatch fleet vs per-spec sub-fleets
+              (wall-clock per slot + compile counts vs K and n_specs)
   roofline    aggregated dry-run roofline terms (run scripts/dryrun_sweep.sh
               first; missing artifacts are skipped gracefully)
 """
@@ -20,8 +22,8 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import (fig7_accuracy, fleet_scale, paper_figs, ragged_scale,
-                   roofline, sched_scale)
+    from . import (fig7_accuracy, fleet_scale, paper_figs, policy_scale,
+                   ragged_scale, roofline, sched_scale)
 
     sections = [
         ("fig5", paper_figs.fig5_collection_evenness),
@@ -32,6 +34,7 @@ def main() -> None:
         ("sched_scale", sched_scale.sched_scale),
         ("fleet_scale", fleet_scale.fleet_scale),
         ("ragged_scale", ragged_scale.ragged_scale),
+        ("policy_scale", policy_scale.policy_scale),
         ("matching", sched_scale.matching_kernel_bench),
         ("roofline", roofline.roofline_table),
     ]

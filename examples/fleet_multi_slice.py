@@ -4,17 +4,20 @@ A 5G operator runs heterogeneous incremental-learning jobs concurrently:
 regional traffic-prediction slices (modest arrival rates, cheap transmission,
 testbed-like EC budgets) next to tenant LM-training slices (heavy arrivals,
 pricier compute, fat ECs). With the batch-first core these are ONE
-``FleetEngine``: per-slice numbers live in a stacked ``SliceParams`` pytree
-and every slot is a single vmapped step inside one jitted scan.
+``FleetEngine``: each slice is a ``SliceJob`` (config + algorithm + seed),
+``from_jobs`` stacks them into one ``SliceParams`` pytree, and every slot is
+a single vmapped step inside one jitted scan.
 
     PYTHONPATH=src python examples/fleet_multi_slice.py
 """
 import dataclasses
+import os
 
-from repro.core import DS, CocktailConfig, FleetEngine
+from repro.core import DS, CocktailConfig, FleetEngine, SliceJob
 from repro.core import metrics
 
-N_CU, N_EC, SLOTS = 12, 4, 60
+N_CU, N_EC = 12, 4
+SLOTS = int(os.environ.get("COCKTAIL_EXAMPLE_SLOTS", "60"))
 
 # Profile A: regional traffic prediction (paper testbed scaled up) ---------
 traffic = CocktailConfig(
@@ -32,24 +35,27 @@ lm = dataclasses.replace(
     c_base=80.0, p_base=120.0, seed=1,
 )
 
-slices = [
-    ("traffic/region-0", traffic),
-    ("traffic/region-1", dataclasses.replace(traffic, zeta=350.0, seed=2)),
-    ("traffic/region-2", dataclasses.replace(traffic, zeta=800.0, seed=3)),
-    ("lm/tenant-a", lm),
-    ("lm/tenant-b", dataclasses.replace(lm, zeta=900.0, eps=0.2, seed=4)),
+jobs = [
+    SliceJob(traffic, DS, name="traffic/region-0"),
+    SliceJob(dataclasses.replace(traffic, zeta=350.0, seed=2), DS,
+             name="traffic/region-1"),
+    SliceJob(dataclasses.replace(traffic, zeta=800.0, seed=3), DS,
+             name="traffic/region-2"),
+    SliceJob(lm, DS, name="lm/tenant-a"),
+    SliceJob(dataclasses.replace(lm, zeta=900.0, eps=0.2, seed=4), DS,
+             name="lm/tenant-b"),
 ]
 
-engine = FleetEngine.from_configs([cfg for _, cfg in slices], DS)
+engine = FleetEngine.from_jobs(jobs)
 print(f"fleet: {engine.n_slices} slices x {SLOTS} slots, shape "
       f"N={engine.shape.n_cu} M={engine.shape.n_ec} — one jitted scan\n")
 
 state, recs = engine.run(SLOTS)
 
 print(f"{'slice':18s} {'unit_cost':>9s} {'trained':>10s} {'skew':>7s} {'q_backlog':>10s}")
-for k, (name, cfg) in enumerate(slices):
-    s = metrics.summary(cfg, engine.slice_state(state, k))
-    print(f"{name:18s} {s['unit_cost']:9.2f} {s['total_trained']:10.0f} "
+for k, job in enumerate(jobs):
+    s = metrics.summary(job.config, engine.slice_state(state, k))
+    print(f"{job.name:18s} {s['unit_cost']:9.2f} {s['total_trained']:10.0f} "
           f"{s['skew_degree']:7.4f} {s['q_backlog']:10.0f}")
 
 print("\nper-slot fleet cost (records are time-major (T, K)):",

@@ -5,6 +5,7 @@ CU-full-connection strawman.
     PYTHONPATH=src python examples/quickstart.py
 """
 import json
+import os
 
 from repro.core import CU_FULL, DS, LDS, CocktailConfig, run
 from repro.core import metrics
@@ -15,17 +16,20 @@ cfg = CocktailConfig(
     c_base=250.0, e_base=50.0, p_base=200.0, pair_iters=30, seed=0,
 )
 
-print("slot-by-slot online scheduling, 60 slots (~5h of 5-min slots)\n")
+SLOTS = int(os.environ.get("COCKTAIL_EXAMPLE_SLOTS", "60"))
+
+print(f"slot-by-slot online scheduling, {SLOTS} slots "
+      f"(~{SLOTS * 5 / 60:.1f}h of 5-min slots)\n")
 for spec in (DS, LDS, CU_FULL):
-    state, recs = run(cfg, spec, 60)
+    state, recs = run(cfg, spec, SLOTS)
     s = metrics.summary(cfg, state)
     print(f"{spec.name:8s} unit_cost={s['unit_cost']:8.2f} "
           f"trained={s['total_trained']:9.0f} samples  "
           f"skew_degree={s['skew_degree']:.4f}  "
           f"collection_stdev={s['stdev_collection']:7.1f}")
 
-state, _ = run(cfg, DS, 60)
-cf, _ = run(cfg, CU_FULL, 60)
+state, _ = run(cfg, DS, SLOTS)
+cf, _ = run(cfg, CU_FULL, SLOTS)
 red = 100 * (metrics.unit_cost(cf) - metrics.unit_cost(state)) / metrics.unit_cost(cf)
 print(f"\nDataSche cost reduction vs CUFull: {red:.1f}% "
       "(paper reports up to 43.7% across scenarios)")

@@ -2,7 +2,7 @@
 
 A real operator's slice population is shape-heterogeneous: a rural region
 with a handful of CUs and two ECs schedules next to a metro slice with
-dozens of CUs and a fat EC pool. `FleetEngine.from_ragged_configs` pads every
+dozens of CUs and a fat EC pool. `FleetEngine.from_jobs` pads every
 slice to the elementwise-max shape, and the `cu_mask`/`ec_mask` entity masks
 in `SliceParams` guarantee the padding is inert — each slice's schedule is
 the same as if it ran alone, unpadded (tests/test_ragged_fleet.py asserts it
@@ -10,10 +10,12 @@ bit-exactly for the single-slice path).
 
     PYTHONPATH=src python examples/ragged_fleet.py
 """
-from repro.core import DS, CocktailConfig, FleetEngine
+import os
+
+from repro.core import DS, CocktailConfig, FleetEngine, SliceJob
 from repro.core import metrics
 
-SLOTS = 60
+SLOTS = int(os.environ.get("COCKTAIL_EXAMPLE_SLOTS", "60"))
 
 # Small rural slice: paper-testbed scale, 6 CUs on 3 modest ECs.
 rural = CocktailConfig(
@@ -38,20 +40,22 @@ suburb = CocktailConfig(
     c_base=50.0, e_base=50.0, p_base=180.0, pair_iters=30, seed=2,
 )
 
-slices = [("rural/6x3", rural), ("metro/16x5", metro), ("suburb/10x4", suburb)]
+jobs = [SliceJob(rural, DS, name="rural/6x3"),
+        SliceJob(metro, DS, name="metro/16x5"),
+        SliceJob(suburb, DS, name="suburb/10x4")]
 
-engine = FleetEngine.from_ragged_configs([cfg for _, cfg in slices], DS)
+engine = FleetEngine.from_jobs(jobs)
 print(f"ragged fleet: {engine.n_slices} slices x {SLOTS} slots, padded to "
       f"N={engine.shape.n_cu} M={engine.shape.n_ec} — one jitted scan")
-print("true shapes:", ", ".join(f"{c.n_cu}x{c.n_ec}" for _, c in slices), "\n")
+print("true shapes:", ", ".join(f"{j.config.n_cu}x{j.config.n_ec}" for j in jobs), "\n")
 
 state, recs = engine.run(SLOTS)
 
 print(f"{'slice':12s} {'unit_cost':>9s} {'trained':>10s} {'skew':>7s} {'q_backlog':>10s}")
-for k, (name, cfg) in enumerate(slices):
+for k, job in enumerate(jobs):
     # slice_state trims the padding, so metrics work off the original config
-    s = metrics.summary(cfg, engine.slice_state(state, k))
-    print(f"{name:12s} {s['unit_cost']:9.2f} {s['total_trained']:10.0f} "
+    s = metrics.summary(job.config, engine.slice_state(state, k))
+    print(f"{job.name:12s} {s['unit_cost']:9.2f} {s['total_trained']:10.0f} "
           f"{s['skew_degree']:7.4f} {s['q_backlog']:10.0f}")
 
 print("\nper-slot fleet records are time-major (T, K):", tuple(recs.cost.shape))

@@ -16,6 +16,14 @@ NO-SLT, NO-LSA, Greedy, ECFull, ECSelf, CUFull) is a one-line variant.
 ``exact=True`` swaps the greedy matchers for the networkx Thm.-1/Thm.-2
 oracles and runs a host loop.
 
+Policy dispatch runs off two indexed registries, ``COLLECTION_POLICIES`` and
+``TRAINING_POLICIES`` (see ``PolicyTable``), in one of two modes: Python-static
+(table lookup by ``spec.collection``/``spec.training`` at trace time) or
+branch-free (``SWITCHED`` spec: ``jax.lax.switch`` over the table indexed by
+the ``SliceParams`` policy leaves, filled by ``with_policy``). The branch-free
+mode is what lets a fleet mix *different* algorithms per slice inside one
+compiled program (``fleet.FleetEngine.from_jobs``).
+
 Batch-first convention: everything numeric that can differ between network
 slices lives in a ``SliceParams`` pytree (traced), while shapes and control
 flow live in the hashable ``ShapeConfig`` (static). ``step``/``run`` accept
@@ -44,16 +52,89 @@ _TINY = 1e-9
 _NEG = MASKED_WEIGHT  # masked-entity weight (see types.mask_pairs)
 
 
+class PolicyTable:
+    """Ordered, registry-backed policy table.
+
+    Every entry shares one call signature, so the same table serves both
+    dispatch paths: Python-static (``table[spec.collection]``, one compiled
+    program per spec) and branch-free (``jax.lax.switch`` over ``table.fns``
+    indexed by a traced ``SliceParams`` policy leaf, one compiled program for
+    a whole mixed-policy fleet). Registration order fixes the integer ids, so
+    ids are stable across processes as long as registration is module-level.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, int] = {}  # name -> index (insertion order)
+        self._fns: list = []
+
+    def register(self, name: str):
+        """Decorator: append ``fn`` under ``name`` with the next free id."""
+        def deco(fn):
+            if name in self._entries:
+                raise ValueError(f"{self.kind} policy {name!r} already registered")
+            self._entries[name] = len(self._fns)
+            self._fns.append(fn)
+            return fn
+        return deco
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._entries)
+
+    @property
+    def fns(self) -> tuple:
+        """Implementations in id order — the ``lax.switch`` branch list."""
+        return tuple(self._fns)
+
+    def index(self, name: str) -> int:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown {self.kind} policy {name!r}; "
+                           f"registered: {list(self._entries)}") from None
+
+    def __getitem__(self, name: str):
+        return self._fns[self.index(name)]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def __iter__(self):
+        return iter(self._entries)
+
+
+COLLECTION_POLICIES = PolicyTable("collection")
+TRAINING_POLICIES = PolicyTable("training")
+
+# Sentinel policy name selecting branch-free dispatch (see SWITCHED below).
+_SWITCH = "switch"
+
+
 @dataclasses.dataclass(frozen=True)
 class AlgoSpec:
-    """Which variant of the scheduler to run (paper Sec. IV benchmarks)."""
+    """Which variant of the scheduler to run (paper Sec. IV benchmarks).
+
+    ``collection``/``training`` name entries of ``COLLECTION_POLICIES`` /
+    ``TRAINING_POLICIES``; the special value ``"switch"`` defers the choice to
+    the ``SliceParams`` policy leaves at runtime (branch-free dispatch, see
+    ``SWITCHED``/``with_policy``).
+    """
 
     name: str = "ds"
-    collection: str = "skew"  # skew | plain | cufull
-    training: str = "skew"  # skew | linear | solo | ecfull
+    collection: str = "skew"  # skew | plain | cufull | switch
+    training: str = "skew"  # skew | linear | solo | ecfull | switch
     use_lsa: bool = True  # long-term skew amendment (phi/lam multipliers)
     learning_aid: bool = False
     exact: bool = False  # exact Thm.1/Thm.2 matching oracles (host-side)
+
+    @property
+    def switched(self) -> bool:
+        """True if this spec defers policy choice to the params leaves."""
+        return self.collection == _SWITCH or self.training == _SWITCH
 
 
 DS = AlgoSpec(name="ds")
@@ -67,8 +148,53 @@ EC_FULL = AlgoSpec(name="ecfull", training="ecfull")
 EC_SELF = AlgoSpec(name="ecself", training="solo")
 CU_FULL = AlgoSpec(name="cufull", collection="cufull")
 
+# Branch-free dispatch: policy choice is jax.lax.switch over the tables,
+# indexed by the SliceParams policy leaves (with_policy). use_lsa on the spec
+# is ignored — the leaves carry it as a {0,1} float32 gate (selects, never a
+# Python `if`) — so K slices running DIFFERENT paper variants vmap into ONE
+# compiled program (fleet.from_jobs). spec.learning_aid keeps ONE static
+# role: it decides whether the L-DS virtual-update path is compiled into the
+# program at all (it runs every slot, gated per slice by the learning_aid
+# leaf). SWITCHED_NOAID compiles it out — use it when no slice of the fleet
+# runs L-DS (from_jobs picks automatically); under it the learning_aid leaf
+# is ignored entirely.
+SWITCHED = AlgoSpec(name="switched", collection=_SWITCH, training=_SWITCH,
+                    learning_aid=True)
+SWITCHED_NOAID = AlgoSpec(name="switched-noaid", collection=_SWITCH,
+                          training=_SWITCH)
+
 ALL_SPECS = {s.name: s for s in
              [DS, DS_EXACT, LDS, NO_SDC, NO_SLT, NO_LSA, GREEDY, EC_FULL, EC_SELF, CU_FULL]}
+
+
+def _pin_default_policy_ids() -> None:
+    # SliceParams.from_config (types.py) defaults the policy leaves to DS
+    # without importing this module; fail fast at import if table order ever
+    # drifts (a real raise, not assert: must survive python -O).
+    if (COLLECTION_POLICIES.index(DS.collection) != 0
+            or TRAINING_POLICIES.index(DS.training) != 0
+            or not DS.use_lsa or DS.learning_aid):
+        raise RuntimeError(
+            "policy table order drifted: SliceParams.from_config hardcodes "
+            "the DS policy leaves as collect_id=0/train_id=0/use_lsa=1/"
+            "learning_aid=0 (types.py); keep DS's policies registered first "
+            "or update those defaults")
+
+
+def with_policy(params: SliceParams, spec: AlgoSpec) -> SliceParams:
+    """Fill the policy leaves of ``params`` from a static ``spec`` so the
+    slice can run under branch-free (``SWITCHED``) dispatch."""
+    if spec.exact:
+        raise ValueError(f"spec {spec.name!r} is exact (host-side oracles); "
+                         "it has no branch-free dispatch path")
+    if spec.switched:
+        raise ValueError("with_policy needs a concrete spec, not SWITCHED")
+    return params._replace(
+        collect_id=jnp.asarray(COLLECTION_POLICIES.index(spec.collection), jnp.int32),
+        train_id=jnp.asarray(TRAINING_POLICIES.index(spec.training), jnp.int32),
+        use_lsa=jnp.asarray(1.0 if spec.use_lsa else 0.0, jnp.float32),
+        learning_aid=jnp.asarray(1.0 if spec.learning_aid else 0.0, jnp.float32),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -92,7 +218,7 @@ def collection_weights(net: NetworkState, mults: Multipliers,
 
 
 def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
-                     mults: Multipliers, use_lsa: bool,
+                     mults: Multipliers, use_lsa: bool | jax.Array,
                      params: Optional[SliceParams] = None) -> tuple[jax.Array, jax.Array]:
     """Returns (beta (N,M), gamma (N,M,M)).
 
@@ -100,13 +226,22 @@ def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
     gamma[i,j,k] weight of y[i,j,k] (from queue R[i,j], trained at EC k)
                  = beta[i,k] + eta[i,j] - eta[i,k] - e[j,k]
 
+    ``use_lsa`` is a Python bool on the static dispatch path and a traced
+    {0,1} float32 gate under SWITCHED dispatch; the gate multiplies phi/lam,
+    which is bit-exact against both static branches (x*1 == x, finite x*0 == 0).
+
     Ragged padding: any entry touching a masked CU/EC is forced to the large
     negative ``_NEG`` so every training solver (waterfill/coordinate-ascent/
     knapsack) treats it as inactive and allocates exactly zero there.
     """
     _, params = split_config(cfg, params)
-    phi = mults.phi if use_lsa else jnp.zeros_like(mults.phi)
-    lam = mults.lam if use_lsa else jnp.zeros_like(mults.lam)
+    if isinstance(use_lsa, bool):
+        phi = mults.phi if use_lsa else jnp.zeros_like(mults.phi)
+        lam = mults.lam if use_lsa else jnp.zeros_like(mults.lam)
+    else:
+        gate = jnp.asarray(use_lsa, jnp.float32)
+        phi = mults.phi * gate
+        lam = mults.lam * gate
     d_hi, d_lo = params.delta_hi, params.delta_lo
     common = jnp.sum(lam * d_hi[:, None] - phi * d_lo[:, None], axis=0)  # (M,)
     beta = -net.p[None, :] + mults.eta - lam + phi + common[None, :]
@@ -121,9 +256,11 @@ def training_weights(cfg: CocktailConfig | ShapeConfig, net: NetworkState,
 
 
 # --------------------------------------------------------------------------
-# Collection policies
+# Collection policies — shared signature (shape, params, net, mults, queues,
+# exact) -> (alpha, theta); registration order fixes the lax.switch branch id.
 # --------------------------------------------------------------------------
 
+@COLLECTION_POLICIES.register("skew")
 def _collect_skew(shape, params, net, mults, queues, exact):
     cu, ec = entity_masks(params)
     w = collection_weights(net, mults, cu, ec)
@@ -135,6 +272,7 @@ def _collect_skew(shape, params, net, mults, queues, exact):
     return matching.greedy_collection(logw)
 
 
+@COLLECTION_POLICIES.register("plain")
 def _collect_plain(shape, params, net, mults, queues, exact):
     # Imported lazily: kernels/matching/ref.py depends on core.matching, so a
     # top-level import here would be circular when the kernels package loads
@@ -150,6 +288,7 @@ def _collect_plain(shape, params, net, mults, queues, exact):
     return alpha, alpha  # theta = 1 on the selected connection
 
 
+@COLLECTION_POLICIES.register("cufull")
 def _collect_cufull(shape, params, net, mults, queues, exact):
     # Full connection over the *real* entities only: every real EC slot is
     # shared evenly by the n_real connected CUs (theta = 1/n_real each).
@@ -160,11 +299,9 @@ def _collect_cufull(shape, params, net, mults, queues, exact):
     return alpha, theta
 
 
-_COLLECTORS = {"skew": _collect_skew, "plain": _collect_plain, "cufull": _collect_cufull}
-
-
 # --------------------------------------------------------------------------
-# Training policies
+# Training policies — shared signature (shape, params, net, mults, queues,
+# exact, use_lsa) -> (x, y, z); registered in the same indexed-table scheme.
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
@@ -230,17 +367,20 @@ def _train_generic(shape, params, net, mults, queues, exact, use_lsa, solo_fn, p
     return x, y, z
 
 
+@TRAINING_POLICIES.register("skew")
 def _train_skew(shape, params, net, mults, queues, exact, use_lsa):
     pair_fn = functools.partial(training_alloc.pair_allocate, iters=shape.pair_iters)
     return _train_generic(shape, params, net, mults, queues, exact, use_lsa,
                           training_alloc.solo_waterfill, pair_fn)
 
 
+@TRAINING_POLICIES.register("linear")
 def _train_linear(shape, params, net, mults, queues, exact, use_lsa):
     return _train_generic(shape, params, net, mults, queues, exact, use_lsa,
                           training_alloc.linear_solo, training_alloc.linear_pair)
 
 
+@TRAINING_POLICIES.register("solo")
 def _train_solo(shape, params, net, mults, queues, exact, use_lsa):
     beta, _ = training_weights(shape, net, mults, use_lsa, params)
     budgets = net.f / params.rho
@@ -250,6 +390,7 @@ def _train_solo(shape, params, net, mults, queues, exact, use_lsa):
     return x, jnp.zeros((shape.n_cu, m, m), jnp.float32), jnp.zeros((m, m), jnp.float32)
 
 
+@TRAINING_POLICIES.register("ecfull")
 def _train_ecfull(shape, params, net, mults, queues, exact, use_lsa):
     beta, gamma = training_weights(shape, net, mults, use_lsa, params)
     budgets = net.f / params.rho
@@ -258,10 +399,6 @@ def _train_ecfull(shape, params, net, mults, queues, exact, use_lsa):
     _, ec = entity_masks(params)
     z = (jnp.ones((m, m), jnp.float32) - jnp.eye(m, dtype=jnp.float32))
     return x, y, z * (ec[:, None] * ec[None, :])
-
-
-_TRAINERS = {"skew": _train_skew, "linear": _train_linear,
-             "solo": _train_solo, "ecfull": _train_ecfull}
 
 
 # --------------------------------------------------------------------------
@@ -278,7 +415,8 @@ def _served(dec_alpha, dec_theta, net, queues):
 
 def update_multipliers(cfg: CocktailConfig | ShapeConfig, mults: Multipliers,
                        net: NetworkState, served: jax.Array, x: jax.Array,
-                       y: jax.Array, use_lsa: bool, step: jax.Array | float,
+                       y: jax.Array, use_lsa: bool | jax.Array,
+                       step: jax.Array | float,
                        params: Optional[SliceParams] = None) -> Multipliers:
     _, params = split_config(cfg, params)
     dep_r = x + jnp.sum(y, axis=2)  # leaves queue R[i,j]
@@ -293,11 +431,16 @@ def update_multipliers(cfg: CocktailConfig | ShapeConfig, mults: Multipliers,
     link = cu[:, None] * ec[None, :]
     mu = jnp.maximum(mults.mu + step * (net.arrivals - jnp.sum(served, axis=1)), 0.0) * cu
     eta = jnp.maximum(mults.eta + step * (served - dep_r), 0.0) * link
-    if use_lsa:
+    if isinstance(use_lsa, bool) and not use_lsa:
+        phi, lam = mults.phi, mults.lam
+    else:
         phi = jnp.maximum(mults.phi + step * (d_lo[:, None] * tot_j[None, :] - trained_at), 0.0) * link
         lam = jnp.maximum(mults.lam + step * (trained_at - d_hi[:, None] * tot_j[None, :]), 0.0) * link
-    else:
-        phi, lam = mults.phi, mults.lam
+        if not isinstance(use_lsa, bool):
+            # Traced {0,1} gate (SWITCHED dispatch): select, never a Python if.
+            gate = jnp.asarray(use_lsa, jnp.float32) > 0
+            phi = jnp.where(gate, phi, mults.phi)
+            lam = jnp.where(gate, lam, mults.lam)
     return Multipliers(mu=mu, eta=eta, phi=phi, lam=lam)
 
 
@@ -353,31 +496,82 @@ def _tree_affine(a: Multipliers, b: Multipliers, shift: jax.Array) -> Multiplier
     return jax.tree.map(lambda x, y: x + y - shift, a, b)
 
 
+def _require_policy_leaves(params: SliceParams) -> None:
+    missing = [f for f in ("collect_id", "train_id", "use_lsa", "learning_aid")
+               if getattr(params, f) is None]
+    if missing:
+        raise TypeError(
+            f"SWITCHED dispatch needs the SliceParams policy leaves, but "
+            f"{missing} are unset; fill them with datasche.with_policy(params, "
+            f"spec) or build the fleet via FleetEngine.from_jobs")
+
+
 def step(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, state: SchedulerState,
          net: Optional[NetworkState] = None,
          params: Optional[SliceParams] = None) -> tuple[SchedulerState, SlotRecord, Decision]:
     """Run one slot. Jittable when spec.exact is False (cfg/spec static,
-    params traced); vmappable over a leading slice axis of (params, state)."""
+    params traced); vmappable over a leading slice axis of (params, state).
+
+    Two dispatch modes:
+      * Python-static (any named spec): policy functions are resolved from
+        the tables at trace time — one compiled program per (shape, spec).
+      * Branch-free (``spec.switched``, i.e. ``SWITCHED``/``SWITCHED_NOAID``):
+        the policy choice is ``jax.lax.switch`` over the tables indexed by
+        the traced ``SliceParams`` policy leaves, and the learning-aid
+        virtual update is gated by a select instead of a Python ``if`` — so
+        K slices running different algorithms vmap into ONE compiled
+        program. Under ``SWITCHED`` the virtual plain-P1/P2 path runs every
+        slot (its result is masked out for slices with learning_aid=0) — the
+        price of branch-freedom; ``SWITCHED_NOAID`` compiles it out for
+        fleets with no L-DS slice and ignores the learning_aid leaf.
+    """
     shape, params = split_config(cfg, params)
     rng, k_net = jax.random.split(state.rng)
     if net is None:
         net = sample_network_state(k_net, shape, state.t, params)
 
-    if spec.learning_aid:
-        eff = _tree_affine(state.mults, state.emp_mults, _pi(params))
+    switched = spec.switched
+    if switched:
+        _require_policy_leaves(params)
+        use_lsa: bool | jax.Array = jnp.asarray(params.use_lsa, jnp.float32)
+        aid = jnp.asarray(params.learning_aid, jnp.float32) > 0
+        if spec.learning_aid:
+            # Same affine as _tree_affine (x + y - shift), selected per slice
+            # so the aid=1 branch stays bit-exact against the static L-DS path.
+            pi = _pi(params)
+            eff = jax.tree.map(lambda m, e: jnp.where(aid, m + e - pi, m),
+                               state.mults, state.emp_mults)
+        else:
+            eff = state.mults  # SWITCHED_NOAID: aid leaf ignored wholesale
     else:
-        eff = state.mults
+        use_lsa = spec.use_lsa
+        if spec.learning_aid:
+            eff = _tree_affine(state.mults, state.emp_mults, _pi(params))
+        else:
+            eff = state.mults
 
-    collect = _COLLECTORS[spec.collection]
-    train = _TRAINERS[spec.training]
-    alpha, theta = collect(shape, params, net, eff, state.queues, spec.exact)
-    x, y, z = train(shape, params, net, eff, state.queues, spec.exact, spec.use_lsa)
+    if switched:
+        alpha, theta = jax.lax.switch(
+            params.collect_id,
+            [(lambda p, n, m, q, fn=fn: fn(shape, p, n, m, q, False))
+             for fn in COLLECTION_POLICIES.fns],
+            params, net, eff, state.queues)
+        x, y, z = jax.lax.switch(
+            params.train_id,
+            [(lambda p, n, m, q, fn=fn: fn(shape, p, n, m, q, False, use_lsa))
+             for fn in TRAINING_POLICIES.fns],
+            params, net, eff, state.queues)
+    else:
+        collect = COLLECTION_POLICIES[spec.collection]
+        train = TRAINING_POLICIES[spec.training]
+        alpha, theta = collect(shape, params, net, eff, state.queues, spec.exact)
+        x, y, z = train(shape, params, net, eff, state.queues, spec.exact, use_lsa)
 
     served = _served(alpha, theta, net, state.queues)
     cost = framework_cost(net, served, x, y)
     queues = apply_decision(shape, state.queues, net, served, x, y)
     mults = update_multipliers(shape, state.mults, net, served, x, y,
-                               spec.use_lsa, params.eps, params)
+                               use_lsa, params.eps, params)
 
     emp = state.emp_mults
     if spec.learning_aid:
@@ -386,11 +580,15 @@ def step(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, state: SchedulerStat
         v_alpha, v_theta = _collect_plain(shape, params, net, state.emp_mults,
                                           state.queues, False)
         v_x, v_y, _ = _train_linear(shape, params, net, state.emp_mults,
-                                    state.queues, False, spec.use_lsa)
+                                    state.queues, False, use_lsa)
         v_served = _served(v_alpha, v_theta, net, state.queues)
         sigma = params.sigma0 / jnp.sqrt(state.t.astype(jnp.float32) + 1.0)
         emp = update_multipliers(shape, state.emp_mults, net, v_served, v_x, v_y,
-                                 spec.use_lsa, sigma, params)
+                                 use_lsa, sigma, params)
+        if switched:
+            # learning_aid gate: slices without the aid keep Theta' frozen.
+            emp = jax.tree.map(lambda new, old: jnp.where(aid, new, old),
+                               emp, state.emp_mults)
 
     trained = jnp.sum(x) + jnp.sum(y)
     new_state = SchedulerState(
@@ -440,3 +638,6 @@ def run(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, n_slots: int,
         state, rec, _ = step(shape, spec, state, params=params)
         recs.append(rec)
     return state, stack_slot_records(recs)
+
+
+_pin_default_policy_ids()

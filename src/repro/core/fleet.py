@@ -17,13 +17,22 @@ Axis conventions (documented in ROADMAP.md):
     replicated)
 
 Constraints: all slices of a fleet run at one *compiled* ``ShapeConfig`` (N,
-M and solver iteration counts are compile-time) and one ``AlgoSpec``;
-``exact`` specs are host-side and cannot be vmapped. Slices with different
-*true* (N, M) can still share a fleet via :meth:`FleetEngine.from_ragged_configs`:
-each slice is zero-padded to the elementwise-max shape and its
-``SliceParams`` masks (``cu_mask``/``ec_mask``) make every policy ignore the
-padding, so the padded slice reproduces its standalone run on the real block
-(tests/test_ragged_fleet.py).
+M and solver iteration counts are compile-time); ``exact`` specs are
+host-side and cannot be vmapped. Everything else is transparent through the
+:meth:`FleetEngine.from_jobs` frontend (a list of ``SliceJob``):
+
+  * slices with different *true* (N, M) are zero-padded to the
+    elementwise-max shape, with the ``SliceParams`` entity masks
+    (``cu_mask``/``ec_mask``) making every policy ignore the padding, so the
+    padded slice reproduces its standalone run on the real block
+    (tests/test_ragged_fleet.py);
+  * slices with different ``AlgoSpec`` run under branch-free (``SWITCHED``)
+    dispatch: the policy choice is ``lax.switch`` over the indexed policy
+    tables, driven by the per-slice policy leaves ``with_policy`` fills —
+    still ONE compiled program (tests/test_policy_switch.py).
+
+``from_configs`` / ``from_ragged_configs`` are kept as thin shims over
+``from_jobs`` for older call sites.
 """
 from __future__ import annotations
 
@@ -34,7 +43,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from .datasche import AlgoSpec, DS, SlotRecord, step
+from .datasche import AlgoSpec, DS, SWITCHED, SWITCHED_NOAID, SlotRecord, step
+from .job import JobLike, SliceJob, as_jobs
 from .types import (CocktailConfig, Decision, Multipliers, QueueState,
                     SchedulerState, ShapeConfig, SliceParams, init_state,
                     split_config, stack_slice_params)
@@ -98,12 +108,41 @@ def _fleet_scan(shape: ShapeConfig, spec: AlgoSpec, n_slots: int,
     return jax.lax.scan(body, state, None, length=n_slots)
 
 
+def _stacked_slice_count(params: SliceParams) -> int:
+    """K of a stacked (K, ...) params pytree, validating that every non-None
+    leaf agrees on the leading (slice) axis. Raises naming the offending leaf
+    instead of silently mis-reading an unstacked pytree."""
+    k: Optional[int] = None
+    first = None
+    for name, leaf in zip(SliceParams._fields, params):
+        if leaf is None:
+            continue
+        if jnp.ndim(leaf) == 0:
+            raise ValueError(
+                f"SliceParams leaf {name!r} is rank-0: params look unstacked "
+                "(no leading slice axis); stack K slices with "
+                "stack_slice_params first")
+        n = jnp.shape(leaf)[0]
+        if k is None:
+            k, first = int(n), name
+        elif n != k:
+            raise ValueError(
+                f"inconsistent leading (slice) axis across SliceParams leaves: "
+                f"{first!r} has K={k} but {name!r} has K={n}")
+    if k is None:
+        raise ValueError("SliceParams has no array leaves (every field is "
+                         "None); build it with SliceParams.from_config / "
+                         "stack_slice_params")
+    return k
+
+
 @dataclasses.dataclass(frozen=True)
 class FleetEngine:
     """K-slice batch scheduler: vmapped ``step`` inside one jitted scan.
 
-    Build with :meth:`from_configs` (heterogeneous ``CocktailConfig`` list
-    sharing one shape) or directly from pre-stacked ``SliceParams``.
+    Build with :meth:`from_jobs` (a list of ``SliceJob`` — handles
+    homogeneous, ragged-shape and mixed-policy fleets uniformly), or adopt a
+    pre-stacked ``SliceParams`` pytree via :meth:`from_params`.
     """
 
     shape: ShapeConfig
@@ -114,6 +153,9 @@ class FleetEngine:
     # Per-slice *true* shapes (== (shape,) * K for non-ragged fleets). Only
     # metadata: used by slice_state to trim the padding back off.
     slice_shapes: Optional[tuple[ShapeConfig, ...]] = None
+    # Per-slice AlgoSpec (metadata; the compiled program runs self.spec,
+    # which is SWITCHED for mixed-policy fleets).
+    slice_specs: Optional[tuple[AlgoSpec, ...]] = None
 
     def __post_init__(self):
         if self.spec.exact:
@@ -121,54 +163,68 @@ class FleetEngine:
                              "use datasche.run per slice instead")
 
     @classmethod
+    def from_jobs(cls, jobs: Sequence[JobLike],
+                  spec: AlgoSpec = DS) -> "FleetEngine":
+        """THE fleet constructor: one ``SliceJob`` per slice.
+
+        Transparently composes every supported axis of heterogeneity:
+        numeric params always differ freely; mixed true (N, M) are padded to
+        the elementwise-max shape with entity masks; mixed ``AlgoSpec`` run
+        under branch-free ``SWITCHED`` dispatch (policy leaves +
+        ``lax.switch``), so the whole fleet is still ONE compiled program.
+        Bare ``CocktailConfig`` entries are accepted and get ``spec``.
+        """
+        jobs = as_jobs(jobs, spec)
+        if not jobs:
+            raise ValueError("need at least one SliceJob")
+        pad = ragged_pad_shape([j.shape for j in jobs])
+        policies = {(j.spec.collection, j.spec.training, j.spec.use_lsa,
+                     j.spec.learning_aid) for j in jobs}
+        # Distinct specs with identical policy tuples (e.g. DS vs GREEDY)
+        # still compile one static program — switch only when policies differ.
+        # The policy leaves are filled either way, so the params always state
+        # what each slice runs (static dispatch just ignores them). Mixed
+        # fleets without an L-DS slice get the virtual path compiled out.
+        mixed = len(policies) > 1
+        any_aid = any(j.spec.learning_aid for j in jobs)
+        switch_spec = SWITCHED if any_aid else SWITCHED_NOAID
+        return cls(
+            shape=pad,
+            spec=switch_spec if mixed else jobs[0].spec,
+            params=stack_slice_params(
+                [j.params(pad_shape=pad, policy_leaves=True) for j in jobs]),
+            n_slices=len(jobs),
+            seeds=tuple(j.resolved_seed for j in jobs),
+            slice_shapes=tuple(j.shape for j in jobs),
+            slice_specs=tuple(j.spec for j in jobs),
+        )
+
+    @classmethod
     def from_configs(cls, configs: Sequence[CocktailConfig],
                      spec: AlgoSpec = DS) -> "FleetEngine":
+        """Deprecated shim over :meth:`from_jobs` (kept for older call sites;
+        it still *rejects* mixed shapes, which from_jobs would pad)."""
         if not configs:
             raise ValueError("need at least one slice config")
         shapes = {c.shape for c in configs}
         if len(shapes) != 1:
             raise ValueError(f"fleet slices must share one ShapeConfig, got {shapes}; "
-                             "pad mixed shapes with from_ragged_configs")
-        return cls(
-            shape=configs[0].shape,
-            spec=spec,
-            params=stack_slice_params([c.params for c in configs]),
-            n_slices=len(configs),
-            seeds=tuple(int(c.seed) for c in configs),
-            slice_shapes=tuple(c.shape for c in configs),
-        )
+                             "pad mixed shapes with from_jobs/from_ragged_configs")
+        return cls.from_jobs([SliceJob(config=c, spec=spec) for c in configs])
 
     @classmethod
     def from_ragged_configs(cls, configs: Sequence[CocktailConfig],
                             spec: AlgoSpec = DS) -> "FleetEngine":
-        """Batch slices of *different* true (N, M) into one compiled program.
-
-        Every slice is zero-padded to the elementwise-max ``ShapeConfig`` and
-        carries ``cu_mask``/``ec_mask`` marking its real entities; masked
-        entities get zero capacity/arrivals and -inf weights so collection,
-        pairing and multiplier updates provably ignore them. Per-slot
-        ``SlotRecord`` scalars therefore sum over real entities only, and
-        each slice's trace matches its standalone unpadded ``run()``.
-        """
-        if not configs:
-            raise ValueError("need at least one slice config")
-        pad = ragged_pad_shape([c.shape for c in configs])
-        return cls(
-            shape=pad,
-            spec=spec,
-            params=stack_slice_params(
-                [SliceParams.from_config(c, pad_shape=pad) for c in configs]),
-            n_slices=len(configs),
-            seeds=tuple(int(c.seed) for c in configs),
-            slice_shapes=tuple(c.shape for c in configs),
-        )
+        """Deprecated shim over :meth:`from_jobs`: batch slices of different
+        true (N, M) into one compiled program via padding + entity masks."""
+        return cls.from_jobs([SliceJob(config=c, spec=spec) for c in configs])
 
     @classmethod
     def from_params(cls, shape: ShapeConfig, params: SliceParams,
                     spec: AlgoSpec = DS,
                     seeds: Optional[Sequence[int]] = None) -> "FleetEngine":
         """Adopt an already-stacked (K, ...) SliceParams pytree."""
-        k = params.eps.shape[0]
+        k = _stacked_slice_count(params)
         seeds = tuple(seeds) if seeds is not None else tuple(range(k))
         if len(seeds) != k:
             raise ValueError(f"{k} slices but {len(seeds)} seeds")

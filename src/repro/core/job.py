@@ -1,0 +1,78 @@
+"""SliceJob: the unified per-slice descriptor of the fleet frontend.
+
+A fleet slice is fully described by (what network, which algorithm, which
+randomness): a ``CocktailConfig``, an ``AlgoSpec`` and a seed. ``SliceJob``
+bundles the three so :meth:`FleetEngine.from_jobs` can transparently build
+any fleet the scheduler supports:
+
+  * homogeneous      — every job shares one shape and one spec,
+  * ragged           — mixed true (N, M), padded + masked (PR 2),
+  * mixed-policy     — different ``AlgoSpec`` per slice, dispatched
+                       branch-free via the indexed policy tables (SWITCHED),
+  * any composition of the above — ragged x mixed-policy works.
+
+The older ``from_configs`` / ``from_ragged_configs`` constructors are thin
+shims over ``from_jobs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+from .datasche import DS, AlgoSpec, with_policy
+from .types import CocktailConfig, ShapeConfig, SliceParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceJob:
+    """One fleet slice: network config + scheduling algorithm + seed.
+
+    ``seed`` defaults to ``config.seed``; ``name`` is display-only metadata
+    (per-slice reporting in examples/benchmarks), never part of the program.
+    """
+
+    config: CocktailConfig
+    spec: AlgoSpec = DS
+    seed: Optional[int] = None
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        if self.spec.switched:
+            raise ValueError("a SliceJob carries a concrete AlgoSpec; "
+                             "SWITCHED is an engine-internal dispatch mode")
+        if self.spec.exact:
+            raise ValueError(
+                f"spec {self.spec.name!r} is exact (host-side oracles) and "
+                "cannot join a fleet; use datasche.run per slice instead")
+
+    @property
+    def resolved_seed(self) -> int:
+        return int(self.config.seed if self.seed is None else self.seed)
+
+    @property
+    def shape(self) -> ShapeConfig:
+        return self.config.shape
+
+    def params(self, pad_shape: Optional[ShapeConfig] = None,
+               policy_leaves: bool = False) -> SliceParams:
+        """This job's ``SliceParams``, optionally padded to ``pad_shape`` and
+        with the policy leaves filled from the spec (branch-free dispatch)."""
+        p = SliceParams.from_config(self.config, pad_shape=pad_shape)
+        return with_policy(p, self.spec) if policy_leaves else p
+
+
+JobLike = Union[SliceJob, CocktailConfig]
+
+
+def as_jobs(jobs: Sequence[JobLike], spec: AlgoSpec = DS) -> list[SliceJob]:
+    """Normalise a mixed list of ``SliceJob`` / bare ``CocktailConfig`` (the
+    latter get ``spec``) into a list of jobs."""
+    out = []
+    for j in jobs:
+        if isinstance(j, SliceJob):
+            out.append(j)
+        elif isinstance(j, CocktailConfig):
+            out.append(SliceJob(config=j, spec=spec))
+        else:
+            raise TypeError(f"expected SliceJob or CocktailConfig, got {type(j).__name__}")
+    return out

@@ -57,6 +57,16 @@ class SliceParams(NamedTuple):
     ignores them and the padded program reproduces the unpadded one on the
     real block. ``from_config`` emits all-ones masks, so existing call sites
     are unchanged.
+
+    ``collect_id`` / ``train_id`` / ``use_lsa`` / ``learning_aid`` are the
+    *policy leaves* for branch-free dispatch (``datasche.SWITCHED``): the
+    algorithm choice itself becomes runtime data, so slices running
+    *different* paper variants vmap into one compiled program.
+    ``from_config`` defaults them to the DS spec (skew/skew, LSA on, no
+    learning aid — ids pinned by an assertion in ``datasche``); fill them
+    from any other static ``AlgoSpec`` with ``datasche.with_policy``. The
+    Python-static dispatch path ignores them entirely, so existing call
+    sites are untouched. Hand-constructed params may leave them None.
     """
 
     zeta: jax.Array  # (N,) average data generation rate per CU
@@ -75,6 +85,11 @@ class SliceParams(NamedTuple):
     p_base: jax.Array  # () unit computing cost
     cu_mask: jax.Array = None  # (N,) 1.0 = real CU, 0.0 = ragged padding
     ec_mask: jax.Array = None  # (M,) 1.0 = real EC, 0.0 = ragged padding
+    # Policy leaves (branch-free dispatch; see datasche.with_policy/SWITCHED).
+    collect_id: jax.Array = None  # () int32 index into COLLECTION_POLICIES
+    train_id: jax.Array = None  # () int32 index into TRAINING_POLICIES
+    use_lsa: jax.Array = None  # () float32 {0,1} long-term skew amendment on
+    learning_aid: jax.Array = None  # () float32 {0,1} L-DS virtual updates on
 
     @classmethod
     def from_config(cls, cfg: "CocktailConfig",
@@ -109,6 +124,11 @@ class SliceParams(NamedTuple):
             p_base=f32(cfg.p_base),
             cu_mask=(jnp.arange(n_pad) < n).astype(jnp.float32),
             ec_mask=(jnp.arange(m_pad) < m).astype(jnp.float32),
+            # DS defaults; datasche pins these ids against the policy tables.
+            collect_id=jnp.asarray(0, jnp.int32),
+            train_id=jnp.asarray(0, jnp.int32),
+            use_lsa=jnp.asarray(1.0, jnp.float32),
+            learning_aid=jnp.asarray(0.0, jnp.float32),
         )
 
 
@@ -261,8 +281,18 @@ class Decision(NamedTuple):
     z: jax.Array  # (M, M) {0,1} symmetric pairing
 
     @property
-    def collected(self) -> jax.Array:  # (N, M) samples moved CU->EC this slot
-        return self.alpha * self.theta  # NB: caller multiplies by d
+    def duty(self) -> jax.Array:
+        """(N, M) duty cycle alpha*theta: fraction of the slot each CU->EC
+        connection is live (dimensionless; multiply by capacity d to get
+        samples — see :meth:`collected`)."""
+        return self.alpha * self.theta
+
+    def collected(self, net: "NetworkState") -> jax.Array:
+        """(N, M) samples moved CU->EC this slot: alpha * theta * d, i.e. the
+        duty cycle times the slot's transmission capacity. (Not backlog-capped;
+        the executed transfer additionally scales by the Q backlog, see
+        ``datasche._served``.)"""
+        return self.alpha * self.theta * net.d
 
     @staticmethod
     def zeros(n_cu: int, n_ec: int) -> "Decision":

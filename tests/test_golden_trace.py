@@ -45,17 +45,43 @@ def _traces():
     return {spec.name: _trace(spec) for spec in (DS, LDS)}
 
 
-@pytest.mark.parametrize("spec", [DS, LDS], ids=lambda s: s.name)
-def test_trace_matches_golden(spec):
+def _assert_matches_golden(spec, current):
     assert GOLDEN.exists(), "golden trace missing; run with --regen (see docstring)"
     golden = json.loads(GOLDEN.read_text())[spec.name]
-    current = _trace(spec)
     for key, want in golden.items():
         got = current[key]
         # tight but not bit-exact: float32 reassociation across backends/XLA
         # versions; real solver drift is orders of magnitude larger
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-3, err_msg=key)
+
+
+@pytest.mark.parametrize("spec", [DS, LDS], ids=lambda s: s.name)
+def test_trace_matches_golden(spec):
+    _assert_matches_golden(spec, _trace(spec))
+
+
+@pytest.mark.parametrize("spec", [DS, LDS], ids=lambda s: s.name)
+def test_switched_dispatch_matches_golden(spec):
+    """The branch-free (lax.switch) dispatch path reproduces the committed
+    golden trace too — the policy tables cannot drift from the static path."""
+    from repro.core import SWITCHED, init_state, with_policy
+
+    params = with_policy(CFG.params, spec)
+    state, recs = run(CFG.shape, SWITCHED, SLOTS,
+                      state=init_state(CFG.shape, params, seed=CFG.seed),
+                      params=params)
+    current = {
+        "cost": np.asarray(recs.cost, np.float64).tolist(),
+        "trained": np.asarray(recs.trained, np.float64).tolist(),
+        "q_backlog": np.asarray(recs.q_backlog, np.float64).tolist(),
+        "r_backlog": np.asarray(recs.r_backlog, np.float64).tolist(),
+        "skew": np.asarray(recs.skew, np.float64).tolist(),
+        "total_cost": float(state.total_cost),
+        "total_trained": float(state.total_trained),
+        "final_q": np.asarray(state.queues.q, np.float64).tolist(),
+    }
+    _assert_matches_golden(spec, current)
 
 
 if __name__ == "__main__":

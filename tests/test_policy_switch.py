@@ -1,0 +1,275 @@
+"""Branch-free policy dispatch (SWITCHED) + SliceJob/from_jobs frontend.
+
+Contracts:
+  * spec-equivalence: for EVERY jittable spec in ALL_SPECS, the lax.switch
+    dispatch path (policy leaves via with_policy) reproduces the Python-static
+    dispatch path bit-exactly on CPU — single-slice, and composed with ragged
+    padding;
+  * a mixed-policy fleet (>=3 distinct jittable specs, one ragged shape)
+    compiles to ONE program (jit cache count) and each slice's trace matches
+    its standalone run(cfg, spec, T) — bit-exact for the padded single-slice
+    path, float32-reassociation tolerance on the vmapped fleet path (same
+    harness style as tests/test_ragged_fleet.py);
+  * from_configs/from_ragged_configs shims and from_params validation.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ALL_SPECS, COLLECTION_POLICIES, DS, DS_EXACT, EC_SELF,
+                        LDS, NO_LSA, NO_SDC, SWITCHED, SWITCHED_NOAID,
+                        TRAINING_POLICIES, CocktailConfig, FleetEngine,
+                        PolicyTable, ShapeConfig, SliceJob, SliceParams,
+                        init_state, run, stack_slice_params, with_policy)
+from repro.core.fleet import _fleet_scan, slice_records, trim_state, unstack
+
+BASE = CocktailConfig(n_cu=6, n_ec=3, eps=0.1, pair_iters=15, seed=7,
+                      f_base=(8000.0, 20000.0, 12000.0))
+SLOTS = 10
+JITTABLE = [s for s in ALL_SPECS.values() if not s.exact]
+
+
+def _switched_run(cfg, spec, n_slots, pad_shape=None, switch_spec=SWITCHED):
+    shape = cfg.shape if pad_shape is None else pad_shape
+    params = with_policy(SliceParams.from_config(cfg, pad_shape=pad_shape), spec)
+    state = init_state(shape, params, seed=cfg.seed)
+    return run(shape, switch_spec, n_slots, state=state, params=params)
+
+
+# Shared with the ragged-fleet harness: identical record-equality contract.
+from test_ragged_fleet import _assert_records_equal  # noqa: E402
+
+
+def _assert_state_equal(st_got, st_ref, exact=True):
+    """Like test_ragged_fleet's state helper but also pins emp_mults (the
+    learning-aid gate is what this file is about)."""
+    assert_eq = (np.testing.assert_array_equal if exact else
+                 lambda b, a, err_msg: np.testing.assert_allclose(
+                     b, a, rtol=1e-4, atol=1e-2, err_msg=err_msg))
+    for name in ("q", "r", "omega"):
+        assert_eq(np.asarray(getattr(st_got.queues, name)),
+                  np.asarray(getattr(st_ref.queues, name)), err_msg=name)
+    for name in ("mu", "eta", "phi", "lam"):
+        assert_eq(np.asarray(getattr(st_got.mults, name)),
+                  np.asarray(getattr(st_ref.mults, name)), err_msg=name)
+        assert_eq(np.asarray(getattr(st_got.emp_mults, name)),
+                  np.asarray(getattr(st_ref.emp_mults, name)),
+                  err_msg=f"emp_{name}")
+
+
+# --------------------------------------------------------------------------
+# Spec-equivalence sweep: switch dispatch == static dispatch, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", JITTABLE, ids=lambda s: s.name)
+def test_switched_matches_static_bitexact(spec):
+    st_ref, recs_ref = run(BASE, spec, SLOTS)
+    st_sw, recs_sw = _switched_run(BASE, spec, SLOTS)
+    _assert_records_equal(recs_sw, recs_ref, exact=True)
+    _assert_state_equal(st_sw, st_ref, exact=True)
+
+
+@pytest.mark.parametrize("spec", [s for s in JITTABLE if not s.learning_aid],
+                         ids=lambda s: s.name)
+def test_switched_noaid_matches_static_bitexact(spec):
+    """SWITCHED_NOAID (virtual path compiled out) is equally bit-exact for
+    every spec without the learning aid (whose emp_mults stay frozen on the
+    static path too)."""
+    st_ref, recs_ref = run(BASE, spec, SLOTS)
+    st_sw, recs_sw = _switched_run(BASE, spec, SLOTS,
+                                   switch_spec=SWITCHED_NOAID)
+    _assert_records_equal(recs_sw, recs_ref, exact=True)
+    _assert_state_equal(st_sw, st_ref, exact=True)
+
+
+@pytest.mark.parametrize("spec", [DS, LDS, NO_LSA], ids=lambda s: s.name)
+def test_switched_composes_with_ragged_padding(spec):
+    """switch dispatch x entity-mask padding: still bit-exact vs the plain
+    unpadded static run."""
+    pad = ShapeConfig(n_cu=9, n_ec=5, pair_iters=BASE.pair_iters)
+    st_ref, recs_ref = run(BASE, spec, SLOTS)
+    st_sw, recs_sw = _switched_run(BASE, spec, SLOTS, pad_shape=pad)
+    _assert_records_equal(recs_sw, recs_ref, exact=True)
+    _assert_state_equal(trim_state(st_sw, BASE.shape), st_ref, exact=True)
+
+
+def test_switched_requires_policy_leaves():
+    # from_config defaults the leaves (to DS); hand-built params may not
+    stripped = BASE.params._replace(collect_id=None, train_id=None,
+                                    use_lsa=None, learning_aid=None)
+    state = init_state(BASE.shape, stripped, seed=0)
+    with pytest.raises(TypeError, match="policy leaves"):
+        run(BASE.shape, SWITCHED, 2, state=state, params=stripped)
+
+
+def test_from_config_defaults_policy_leaves_to_ds():
+    p = BASE.params
+    assert int(p.collect_id) == COLLECTION_POLICIES.index(DS.collection)
+    assert int(p.train_id) == TRAINING_POLICIES.index(DS.training)
+    assert float(p.use_lsa) == 1.0 and float(p.learning_aid) == 0.0
+    np.testing.assert_array_equal(
+        np.asarray(with_policy(p, DS).collect_id), np.asarray(p.collect_id))
+
+
+# --------------------------------------------------------------------------
+# Policy tables
+# --------------------------------------------------------------------------
+
+def test_policy_table_registry():
+    assert COLLECTION_POLICIES.names == ("skew", "plain", "cufull")
+    assert TRAINING_POLICIES.names == ("skew", "linear", "solo", "ecfull")
+    assert COLLECTION_POLICIES.index("plain") == 1
+    assert "solo" in TRAINING_POLICIES and "solo" not in COLLECTION_POLICIES
+    assert len(COLLECTION_POLICIES.fns) == len(COLLECTION_POLICIES)
+    with pytest.raises(KeyError, match="unknown collection policy"):
+        COLLECTION_POLICIES.index("nope")
+    t = PolicyTable("demo")
+    t.register("a")(lambda: None)
+    with pytest.raises(ValueError, match="already registered"):
+        t.register("a")(lambda: None)
+
+
+def test_with_policy_leaves():
+    p = with_policy(BASE.params, NO_SDC)
+    assert int(p.collect_id) == COLLECTION_POLICIES.index("plain")
+    assert int(p.train_id) == TRAINING_POLICIES.index("skew")
+    assert float(p.use_lsa) == 1.0 and float(p.learning_aid) == 0.0
+    with pytest.raises(ValueError):
+        with_policy(BASE.params, DS_EXACT)
+    with pytest.raises(ValueError):
+        with_policy(BASE.params, SWITCHED)
+
+
+# --------------------------------------------------------------------------
+# Mixed-policy fleets (acceptance)
+# --------------------------------------------------------------------------
+
+def _mixed_jobs():
+    return [
+        SliceJob(BASE, DS, name="prod/ds"),
+        SliceJob(CocktailConfig(n_cu=8, n_ec=4, pair_iters=15, seed=1,
+                                zeta=800.0), NO_SDC, name="canary/no-sdc"),
+        SliceJob(dataclasses.replace(BASE, eps=0.2, seed=2), LDS),
+        SliceJob(CocktailConfig(n_cu=5, n_ec=2, pair_iters=15, seed=3), NO_LSA),
+        SliceJob(dataclasses.replace(BASE, seed=4), EC_SELF),
+    ]
+
+
+def test_mixed_policy_ragged_fleet_matches_standalone():
+    """>=3 distinct jittable specs + ragged shapes in ONE program; every
+    slice's (T,) trace matches its standalone run (vmap may re-associate
+    float32 reductions: same tolerance as tests/test_fleet.py)."""
+    jobs = _mixed_jobs()
+    eng = FleetEngine.from_jobs(jobs)
+    assert eng.spec.name == "switched"
+    assert eng.shape == ShapeConfig(n_cu=8, n_ec=4, pair_iters=15)
+    assert eng.slice_specs == tuple(j.spec for j in jobs)
+    st, recs = eng.run(SLOTS)
+    assert recs.cost.shape == (SLOTS, len(jobs))
+    for k, job in enumerate(jobs):
+        st_ref, recs_ref = run(job.config, job.spec, SLOTS)
+        _assert_records_equal(slice_records(recs, k), recs_ref, exact=False)
+        _assert_state_equal(trim_state(unstack(st, k), job.config.shape),
+                            st_ref, exact=False)
+
+
+def test_mixed_policy_fleet_compiles_one_program():
+    # The jit cache is process-global; clear it so an earlier compile of the
+    # same (shape, spec, n_slots) key can't turn the run into a cache hit.
+    _fleet_scan._clear_cache()
+    before = _fleet_scan._cache_size()
+    eng = FleetEngine.from_jobs(_mixed_jobs())
+    eng.run(3)
+    assert _fleet_scan._cache_size() - before == 1
+
+
+def test_mixed_noaid_fleet_drops_virtual_path_and_matches():
+    """No L-DS slice -> from_jobs picks SWITCHED_NOAID (virtual updates
+    compiled out); the mixed fleet still matches standalone runs."""
+    jobs = [SliceJob(BASE, DS),
+            SliceJob(dataclasses.replace(BASE, seed=1), NO_SDC),
+            SliceJob(dataclasses.replace(BASE, seed=2), EC_SELF)]
+    eng = FleetEngine.from_jobs(jobs)
+    assert eng.spec == SWITCHED_NOAID
+    st, recs = eng.run(SLOTS)
+    for k, job in enumerate(jobs):
+        st_ref, recs_ref = run(job.config, job.spec, SLOTS)
+        _assert_records_equal(slice_records(recs, k), recs_ref, exact=False)
+        _assert_state_equal(unstack(st, k), st_ref, exact=False)
+
+
+def test_from_jobs_homogeneous_policy_stays_static():
+    """One policy tuple (even via distinct spec names, e.g. DS==GREEDY) keeps
+    the Python-static dispatch path — no switch overhead, params bit-identical
+    to the from_configs shim."""
+    from repro.core import GREEDY
+
+    cfgs = [BASE, dataclasses.replace(BASE, seed=1, zeta=700.0)]
+    eng = FleetEngine.from_jobs([SliceJob(cfgs[0], DS), SliceJob(cfgs[1], GREEDY)])
+    assert eng.spec == DS
+    assert (np.asarray(eng.params.collect_id) == 0).all()
+    shim = FleetEngine.from_configs(cfgs, DS)
+    assert shim.spec == DS
+    for a, b in zip(eng.params, shim.params):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_from_jobs_accepts_bare_configs_and_rejects_bad_jobs():
+    eng = FleetEngine.from_jobs([BASE, dataclasses.replace(BASE, seed=1)], NO_LSA)
+    assert eng.spec == NO_LSA and eng.n_slices == 2
+    with pytest.raises(ValueError):
+        FleetEngine.from_jobs([])
+    with pytest.raises(ValueError, match="exact"):
+        SliceJob(BASE, DS_EXACT)
+    with pytest.raises(ValueError, match="concrete"):
+        SliceJob(BASE, SWITCHED)
+    with pytest.raises(TypeError):
+        FleetEngine.from_jobs(["not-a-job"])
+
+
+def test_slicejob_seed_resolution():
+    assert SliceJob(BASE).resolved_seed == BASE.seed
+    assert SliceJob(BASE, seed=42).resolved_seed == 42
+    eng = FleetEngine.from_jobs([SliceJob(BASE, seed=42)])
+    assert eng.seeds == (42,)
+
+
+# --------------------------------------------------------------------------
+# Satellites: from_params validation + Decision.duty/collected
+# --------------------------------------------------------------------------
+
+def test_from_params_rejects_unstacked_pytree():
+    with pytest.raises(ValueError, match="unstacked"):
+        FleetEngine.from_params(BASE.shape, BASE.params, DS)
+
+
+def test_from_params_rejects_inconsistent_leading_axis():
+    stacked = stack_slice_params([BASE.params, BASE.params])
+    bad = stacked._replace(zeta=stacked.zeta[:1])
+    with pytest.raises(ValueError, match="zeta"):
+        FleetEngine.from_params(BASE.shape, bad, DS)
+
+
+def test_from_params_valid_roundtrip():
+    stacked = stack_slice_params(
+        [BASE.params, dataclasses.replace(BASE, eps=0.3).params])
+    eng = FleetEngine.from_params(BASE.shape, stacked, DS, seeds=(1, 2))
+    assert eng.n_slices == 2
+
+
+def test_decision_duty_and_collected():
+    import jax
+
+    from repro.core import step
+
+    state = init_state(BASE.shape, BASE.params, seed=0)
+    rng = jax.random.split(state.rng)[1]
+    from repro.core import sample_network_state
+    net = sample_network_state(rng, BASE.shape, state.t, BASE.params)
+    _, _, dec = step(BASE.shape, DS, state, net=net, params=BASE.params)
+    np.testing.assert_array_equal(np.asarray(dec.duty),
+                                  np.asarray(dec.alpha * dec.theta))
+    np.testing.assert_array_equal(np.asarray(dec.collected(net)),
+                                  np.asarray(dec.alpha * dec.theta * net.d))
+    assert not isinstance(type(dec).collected, property)
