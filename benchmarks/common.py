@@ -51,12 +51,39 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+# Every emit_json row also lands here so the harness can write per-bench
+# artifact files at the end of a run (write_bench_artifacts).
+_BENCH_ROWS: list[dict] = []
+
+
 def emit_json(name: str, **fields):
     """Machine-readable benchmark row: one `BENCH {...}` JSON line per
     measurement so external tooling can track the perf trajectory across PRs
-    without parsing the human CSV."""
+    without parsing the human CSV. Rows are also collected for
+    ``write_bench_artifacts``."""
     import json
 
     row = {"bench": name}
     row.update(fields)
+    _BENCH_ROWS.append(row)
     print("BENCH " + json.dumps(row, sort_keys=True))
+
+
+def write_bench_artifacts(outdir: str = ".") -> list:
+    """Write every collected BENCH row to ``BENCH_<name>.json`` (one JSON
+    array per bench name, in ``outdir``) and return the written paths. This
+    is what makes the perf trajectory durable: the stdout rows vanish with
+    the CI log, the artifacts get uploaded (.github/workflows/tier1.yml)."""
+    import collections
+    import json
+    import pathlib
+
+    groups: dict[str, list] = collections.defaultdict(list)
+    for row in _BENCH_ROWS:
+        groups[row["bench"]].append(row)
+    paths = []
+    for name, rows in sorted(groups.items()):
+        path = pathlib.Path(outdir) / f"BENCH_{name}.json"
+        path.write_text(json.dumps(rows, indent=1, sort_keys=True) + "\n")
+        paths.append(path)
+    return paths

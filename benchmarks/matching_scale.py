@@ -1,0 +1,88 @@
+"""Matching-kernel scaling: kernel-vs-reference slot cost for the three
+greedy matchers across N x M (paper Sec. III-D scalability table).
+
+Sweeps N in {8, 32, 128, 512} x M in {3, 8, 16}: the testbed shape, the
+simulation scale and the "thousands of CUs" regime the kernel subsystem
+targets. Per shape it times the jitted jnp references for the two *new*
+dispatch ops (skew-aware collection, Thm.-2 pairing) plus the plain
+assignment, and — on TPU — the Pallas kernels, emitting one BENCH JSON row
+per (op, shape, impl). On CPU the kernels only run in interpret mode (a
+Python-level emulator whose timing is meaningless), so instead of timing
+them the small shapes get a bit-exactness parity bit in the row.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.matching import ops
+
+from .common import emit, emit_json
+
+N_SWEEP = (8, 32, 128, 512)
+M_SWEEP = (3, 8, 16)
+# Interpret mode walks the full sequential grid in Python; keep parity checks
+# to shapes where that costs < ~1s.
+PARITY_MAX_N = 32
+
+
+def _time(fn, *args, repeat: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+def matching_scale():
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(0)
+    for n in N_SWEEP:
+        for m in M_SWEEP:
+            logw = jnp.asarray(np.log(rng.uniform(0.2, 40.0, (n, m))), jnp.float32)
+            w = jnp.asarray(rng.uniform(-1.0, 10.0, (n, m)), jnp.float32)
+            solo = jnp.asarray(rng.uniform(0.0, 5.0, (m,)), jnp.float32)
+            pair = rng.uniform(0.0, 10.0, (m, m))
+            pair = jnp.asarray((pair + pair.T) / 2, jnp.float32)
+
+            cases = {
+                "collection": (lambda a: ops.greedy_collection(a, impl="ref")[0], logw),
+                "pairing": (lambda a: ops.greedy_pairing(solo, a, impl="ref"), pair),
+                "assignment": (lambda a: ops.greedy_assignment(a, impl="ref"), w),
+            }
+            for op, (ref_fn, arg) in cases.items():
+                us_ref = _time(jax.jit(ref_fn), arg)
+                row = dict(op=op, n_cu=n, n_ec=m, us_ref=round(us_ref, 1),
+                           backend=jax.default_backend())
+                if on_tpu:
+                    pallas_fn = {
+                        "collection": lambda a: ops.greedy_collection(a, impl="pallas")[0],
+                        "pairing": lambda a: ops.greedy_pairing(solo, a, impl="pallas"),
+                        "assignment": lambda a: ops.greedy_assignment(a, impl="pallas"),
+                    }[op]
+                    us_pal = _time(jax.jit(pallas_fn), arg)
+                    row["us_pallas"] = round(us_pal, 1)
+                    row["speedup"] = round(us_ref / max(us_pal, 1e-9), 2)
+                elif n <= PARITY_MAX_N:
+                    interp_fn = {
+                        "collection": lambda a: ops.greedy_collection(
+                            a, impl="pallas", interpret=True)[0],
+                        "pairing": lambda a: ops.greedy_pairing(
+                            solo, a, impl="pallas", interpret=True),
+                        "assignment": lambda a: ops.greedy_assignment(
+                            a, impl="pallas", interpret=True),
+                    }[op]
+                    row["interpret_matches"] = bool(
+                        jnp.array_equal(interp_fn(arg), ref_fn(arg)))
+                emit(f"matching_scale/{op}/N{n}xM{m}", row["us_ref"],
+                     f"ref-{row['backend']}")
+                emit_json("matching_scale", **row)
+
+
+if __name__ == "__main__":
+    matching_scale()

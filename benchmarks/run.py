@@ -11,8 +11,14 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   ragged_scale padded mixed-shape fleet vs per-shape sub-fleets (BENCH rows)
   policy_scale mixed-policy switch-dispatch fleet vs per-spec sub-fleets
               (wall-clock per slot + compile counts vs K and n_specs)
+  matching_scale kernel-vs-reference cost of the three greedy matchers
+              across N x M (BENCH rows; Pallas timings on TPU)
   roofline    aggregated dry-run roofline terms (run scripts/dryrun_sweep.sh
               first; missing artifacts are skipped gracefully)
+
+Every BENCH row printed to stdout is also written to a ``BENCH_<name>.json``
+artifact at the end of the run (common.write_bench_artifacts), so the perf
+trajectory survives the CI log; the weekly workflow uploads them.
 """
 from __future__ import annotations
 
@@ -22,8 +28,9 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import (fig7_accuracy, fleet_scale, paper_figs, policy_scale,
-                   ragged_scale, roofline, sched_scale)
+    from . import (common, fig7_accuracy, fleet_scale, matching_scale,
+                   paper_figs, policy_scale, ragged_scale, roofline,
+                   sched_scale)
 
     sections = [
         ("fig5", paper_figs.fig5_collection_evenness),
@@ -35,6 +42,7 @@ def main() -> None:
         ("fleet_scale", fleet_scale.fleet_scale),
         ("ragged_scale", ragged_scale.ragged_scale),
         ("policy_scale", policy_scale.policy_scale),
+        ("matching_scale", matching_scale.matching_scale),
         ("matching", sched_scale.matching_kernel_bench),
         ("roofline", roofline.roofline_table),
     ]
@@ -46,6 +54,8 @@ def main() -> None:
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    for path in common.write_bench_artifacts():
+        print(f"artifact/{path},0,written")
     print(f"summary/sections_failed,0,{failures}")
 
 

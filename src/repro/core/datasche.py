@@ -41,7 +41,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import matching, training_alloc
+from . import training_alloc
+# Production matching goes through the kernels dispatch layer: Pallas on TPU,
+# identical jnp refs elsewhere, batch-compatible and mask-aware. No cycle:
+# kernels/matching depends only on core.types.
+from ..kernels.matching import ops as matching_ops
 from .network import framework_cost, sample_network_state
 from .types import (MASKED_WEIGHT, CocktailConfig, Decision, Multipliers,
                     NetworkState, QueueState, SchedulerState, ShapeConfig,
@@ -269,16 +273,13 @@ def _collect_skew(shape, params, net, mults, queues, exact):
         from . import oracle
         alpha, theta = oracle.exact_collection(np.asarray(logw))
         return jnp.asarray(alpha), jnp.asarray(theta)
-    return matching.greedy_collection(logw)
+    # Kernel-dispatched (Pallas on TPU): the masks are redundant with the
+    # masked weights above but pin the padded-pair invariant at the boundary.
+    return matching_ops.greedy_collection(logw, cu_mask=cu, ec_mask=ec)
 
 
 @COLLECTION_POLICIES.register("plain")
 def _collect_plain(shape, params, net, mults, queues, exact):
-    # Imported lazily: kernels/matching/ref.py depends on core.matching, so a
-    # top-level import here would be circular when the kernels package loads
-    # first. Trace-time only (sys.modules hit after the first call).
-    from ..kernels.matching import ops as matching_ops
-
     cu, ec = entity_masks(params)
     w = collection_weights(net, mults)
     # Production path dispatches through the kernels layer: Pallas on TPU,
@@ -352,16 +353,16 @@ def _train_generic(shape, params, net, mults, queues, exact, use_lsa, solo_fn, p
 
     # Ragged padding: a masked EC must never be solo-selected nor paired (a
     # (real, padded) pair would otherwise shadow the real EC's solo option —
-    # its value approximates the solo objective by a different solver).
+    # its value approximates the solo objective by a different solver). The
+    # greedy path delegates the identical masking to the ops dispatch layer.
     _, ec = entity_masks(params)
-    val_solo = jnp.where(ec > 0, val_solo, _NEG)
-    pair_vals = mask_pairs(pair_vals, ec, ec)
-
     if exact:
         from . import oracle
+        val_solo = jnp.where(ec > 0, val_solo, _NEG)
+        pair_vals = mask_pairs(pair_vals, ec, ec)
         match = jnp.asarray(oracle.exact_pairing(np.asarray(val_solo), np.asarray(pair_vals)))
     else:
-        match = matching.greedy_pairing(val_solo, pair_vals)
+        match = matching_ops.greedy_pairing(val_solo, pair_vals, ec_mask=ec)
 
     x, y, z = _compose_from_match(match, x_solo, (pj_a, pk_a), pa, m)
     return x, y, z
@@ -528,7 +529,10 @@ def step(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, state: SchedulerStat
     shape, params = split_config(cfg, params)
     rng, k_net = jax.random.split(state.rng)
     if net is None:
-        net = sample_network_state(k_net, shape, state.t, params)
+        # Per-slot noise from k_net; persistent heterogeneity from the
+        # slot-invariant het_key the state carries unchanged.
+        net = sample_network_state(k_net, shape, state.t, params,
+                                   het_key=state.het_key)
 
     switched = spec.switched
     if switched:
@@ -598,6 +602,7 @@ def step(cfg: CocktailConfig | ShapeConfig, spec: AlgoSpec, state: SchedulerStat
         total_trained=state.total_trained + trained,
         uploaded=state.uploaded + jnp.sum(served, axis=1),
         rng=rng,
+        het_key=state.het_key,
     )
     rec = SlotRecord(
         cost=cost, trained=trained,

@@ -1,128 +1,24 @@
-"""Matching primitives for the two per-slot subproblems.
+"""Matching primitives for the two per-slot subproblems — re-export shim.
 
-Production paths are pure-JAX greedy matchers (the paper itself recommends
-0.5-approximation greedy matching "in practice", Sec. III-D); exact oracles
-based on the virtual-node graph constructions of Thm. 1 / Thm. 2 live in
-``repro.core.oracle`` (networkx blossom, used by tests and the ``exact``
-scheduler mode).
+The jnp reference implementations moved to ``repro.kernels.matching.ref`` so
+the kernel package owns the production semantics (the Pallas kernels are
+tested bit-exact against them) and the dependency points core -> kernels.
+This module keeps the historical ``repro.core.matching`` names importable.
+
+Production call sites should go through the dispatch layer
+``repro.kernels.matching.ops`` (Pallas on TPU, these refs elsewhere,
+batch-compatible and mask-aware); exact oracles for the Thm.-1 / Thm.-2
+graph constructions live in ``repro.core.oracle``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
+from repro.kernels.matching.ref import (  # noqa: F401
+    _marginal_penalty,
+    greedy_assignment_ref as greedy_assignment,
+    greedy_collection_ref as greedy_collection,
+    greedy_pairing_ref as greedy_pairing,
+)
 
 _NEG = -1e30
 
-
-def _marginal_penalty(n: jax.Array) -> jax.Array:
-    """(n+1)log(n+1) - n log(n): marginal crowding penalty of adding the
-    (n+1)-th CU to an EC under the optimal theta = 1/n time split."""
-    n = n.astype(jnp.float32)
-    return (n + 1.0) * jnp.log(n + 1.0) - n * jnp.where(n > 0, jnp.log(jnp.maximum(n, 1.0)), 0.0)
-
-
-def greedy_collection(logw: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Greedy solve of P1' (skew-aware collection).
-
-    Equivalent to greedy maximum-weight matching on the Thm.-1 bipartite graph
-    with N virtual EC copies: repeatedly connect the (CU, EC) pair with the
-    largest marginal gain  logw[i,j] - [(n_j+1)log(n_j+1) - n_j log n_j]
-    until no pair has positive gain.
-
-    Args:
-      logw: (N, M) log of collection weight w_ij = d_ij (mu_i - eta_ij - c_ij);
-            -inf (or very negative) where w_ij <= 0.
-    Returns:
-      alpha (N, M) in {0,1} and theta (N, M) with theta = 1/n_j on connections.
-    """
-    n_cu, n_ec = logw.shape
-    logw = jnp.where(jnp.isfinite(logw), logw, _NEG)
-
-    def body(_, state):
-        assigned, count, alpha, done = state
-        gain = logw - _marginal_penalty(count)[None, :]
-        gain = jnp.where(assigned[:, None], _NEG, gain)
-        flat = jnp.argmax(gain)
-        i, j = flat // n_ec, flat % n_ec
-        best = gain[i, j]
-        take = (best > 0.0) & (~done)
-        assigned = assigned.at[i].set(jnp.where(take, True, assigned[i]))
-        count = count.at[j].add(jnp.where(take, 1, 0))
-        alpha = alpha.at[i, j].set(jnp.where(take, 1.0, alpha[i, j]))
-        return assigned, count, alpha, done | (~take)
-
-    state = (
-        jnp.zeros((n_cu,), bool),
-        jnp.zeros((n_ec,), jnp.int32),
-        jnp.zeros((n_cu, n_ec), jnp.float32),
-        jnp.asarray(False),
-    )
-    assigned, count, alpha, _ = jax.lax.fori_loop(0, n_cu, body, state)
-    theta = alpha / jnp.maximum(count[None, :].astype(jnp.float32), 1.0)
-    return alpha, theta
-
-
-def greedy_assignment(w: jax.Array) -> jax.Array:
-    """Plain P1 (non-skew-aware collection, used by L-DS step 3 / NO-SDC):
-    each EC gives its whole slot to one CU; select M disjoint (CU, EC) pairs
-    by descending weight (the paper's prescribed O(NM log NM) policy).
-
-    Args:
-      w: (N, M) linear weights d_ij (mu_i - eta_ij - c_ij); only w>0 usable.
-    Returns:
-      alpha (N, M) in {0,1}; theta is alpha itself (full slot).
-    """
-    n_cu, n_ec = w.shape
-    w = jnp.where(w > 0, w, _NEG)
-
-    def body(_, state):
-        cu_free, ec_free, alpha = state
-        avail = cu_free[:, None] & ec_free[None, :]
-        g = jnp.where(avail, w, _NEG)
-        flat = jnp.argmax(g)
-        i, j = flat // n_ec, flat % n_ec
-        take = g[i, j] > 0.0
-        cu_free = cu_free.at[i].set(jnp.where(take, False, cu_free[i]))
-        ec_free = ec_free.at[j].set(jnp.where(take, False, ec_free[j]))
-        alpha = alpha.at[i, j].set(jnp.where(take, 1.0, alpha[i, j]))
-        return cu_free, ec_free, alpha
-
-    state = (jnp.ones((n_cu,), bool), jnp.ones((n_ec,), bool), jnp.zeros((n_cu, n_ec), jnp.float32))
-    _, _, alpha = jax.lax.fori_loop(0, n_ec, body, state)
-    return alpha
-
-
-def greedy_pairing(solo: jax.Array, pair: jax.Array) -> jax.Array:
-    """Greedy solve of the Thm.-2 EC-pairing matching.
-
-    Nodes are ECs; a self-loop (virtual node j') carries the solo-training
-    value, an edge (j,k) the pair-training value. Greedy maximum-weight
-    matching: repeatedly take the best available entry with positive value.
-
-    Args:
-      solo: (M,) optimal solo objective per EC (problem 20).
-      pair: (M, M) optimal pair objective (problem 21), symmetric, diag unused.
-    Returns:
-      match: (M, M) float matrix; match[j,j]=1 -> solo, match[j,k]=1 -> paired.
-    """
-    n_ec = solo.shape[0]
-    w = pair * (1.0 - jnp.eye(n_ec)) + jnp.diag(solo)
-
-    def body(_, state):
-        free, match, done = state
-        avail = free[:, None] & free[None, :]
-        g = jnp.where(avail, w, _NEG)
-        flat = jnp.argmax(g)
-        j, k = flat // n_ec, flat % n_ec
-        take = (g[j, k] > 0.0) & (~done)
-        free = free.at[j].set(jnp.where(take, False, free[j]))
-        free = free.at[k].set(jnp.where(take, False, free[k]))
-        match = match.at[j, k].set(jnp.where(take, 1.0, match[j, k]))
-        match = match.at[k, j].set(jnp.where(take, 1.0, match[k, j]))
-        return free, match, done | (~take)
-
-    state = (jnp.ones((n_ec,), bool), jnp.zeros((n_ec, n_ec), jnp.float32), jnp.asarray(False))
-    _, match, _ = jax.lax.fori_loop(0, n_ec, body, state)
-    return match
+__all__ = ["greedy_collection", "greedy_assignment", "greedy_pairing"]

@@ -20,17 +20,30 @@ the generator padding-invariant: a slice zero-padded to a larger
 and the ``cu_mask`` / ``ec_mask`` in ``SliceParams`` zero out capacity and
 arrivals of padded entities so they can never carry traffic or work.
 
+Two random streams drive each slot:
+
+  * the **per-slot key** (split off ``SchedulerState.rng`` each slot) draws
+    everything i.i.d. across slots — traffic/workload noise, unit costs,
+    arrivals;
+  * the **slot-invariant ``het_key``** (``types.het_key_from_seed``, carried
+    unchanged in ``SchedulerState.het_key``) draws the *persistent* structure
+    — per-link/per-EC capacity multipliers and the diurnal phases
+    (:func:`heterogeneity`). This is the capacity heterogeneity driving the
+    paper's data-skew problem; deriving it from the per-slot key (the old
+    behaviour) silently resampled it i.i.d. every slot, so the skew the
+    scheduler is built to fight never persisted.
+
 Everything is jittable; one call produces the full NetworkState for slot t.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .types import (CocktailConfig, NetworkState, ShapeConfig, SliceParams,
-                    entity_masks, split_config)
+                    entity_masks, het_key_from_seed, split_config)
 
 
 def _fold_vec(key: jax.Array, n: int) -> jax.Array:
@@ -62,10 +75,42 @@ def _beta_grid(key, n, m, a, b):
         _fold_grid(key, n, m))
 
 
-def _traffic(key: jax.Array, n: int, m: int, t: jax.Array) -> jax.Array:
-    """Normalized traffic in [0, 0.95]: diurnal base + Beta(2,4) noise."""
-    k1, k2 = jax.random.split(key)
-    phase = _uniform_grid(k1, n, m, minval=0.0, maxval=2 * jnp.pi)
+class Heterogeneity(NamedTuple):
+    """Slot-invariant structure of the network: pure function of ``het_key``.
+
+    ``link_het``/``ec_het`` are the "static-ish" capacity multipliers (paper
+    Sec. IV-C derives them from node distance); ``phase_d``/``phase_D`` the
+    per-link diurnal phases of the traffic sinusoid. All entity-keyed, so the
+    draws are padding-invariant like every other sampler here."""
+
+    link_het: jax.Array  # (N, M) CU->EC capacity multiplier, U[0.5, 1.5]
+    ec_het: jax.Array  # (M, M) EC<->EC capacity multiplier, U[0.5, 1.5]
+    phase_d: jax.Array  # (N, M) diurnal phase of the CU->EC traffic
+    phase_D: jax.Array  # (M, M) diurnal phase of the EC<->EC traffic
+
+
+def heterogeneity(het_key: jax.Array, n: int, m: int) -> Heterogeneity:
+    """Draw the persistent heterogeneity from the slot-invariant ``het_key``.
+
+    Called with the SAME key every slot of a run (``SchedulerState.het_key``),
+    so links stay persistently heterogeneous across slots — resampling these
+    from the per-slot key was the bug that erased the capacity skew."""
+    two_pi = 2.0 * jnp.pi
+    return Heterogeneity(
+        link_het=0.5 + _uniform_grid(jax.random.fold_in(het_key, 0), n, m),
+        ec_het=0.5 + _uniform_grid(jax.random.fold_in(het_key, 1), m, m),
+        phase_d=_uniform_grid(jax.random.fold_in(het_key, 2), n, m, 0.0, two_pi),
+        phase_D=_uniform_grid(jax.random.fold_in(het_key, 3), m, m, 0.0, two_pi),
+    )
+
+
+def _traffic(key: jax.Array, phase: jax.Array, t: jax.Array) -> jax.Array:
+    """Normalized traffic in [0, 0.95]: diurnal base (slot-invariant
+    ``phase`` from :func:`heterogeneity`) + per-slot Beta(2,4) noise."""
+    n, m = phase.shape
+    # The phase used to be drawn from k1; it now arrives slot-invariant from
+    # het_key. The split stays so the k2 noise stream is unchanged.
+    _, k2 = jax.random.split(key)
     diurnal = 0.35 + 0.3 * jnp.sin(2 * jnp.pi * t / 288.0 + phase)  # 5-min slots
     noise = _beta_grid(k2, n, m, 2.0, 4.0) * 0.4
     return jnp.clip(diurnal + noise, 0.0, 0.95)
@@ -79,20 +124,24 @@ def _workload(key: jax.Array, m: int) -> jax.Array:
 def sample_network_state(
     key: jax.Array, cfg: CocktailConfig | ShapeConfig, t: jax.Array,
     params: Optional[SliceParams] = None,
+    het_key: Optional[jax.Array] = None,
 ) -> NetworkState:
+    """NetworkState for slot t: per-slot noise from ``key``, persistent
+    heterogeneity from ``het_key`` (defaults to the seed-0 het key for legacy
+    direct callers; production ``step`` passes ``SchedulerState.het_key``)."""
     shape, params = split_config(cfg, params)
     n, m = shape.n_cu, shape.n_ec
-    kd, kD, kf, kc, ke, kp, ka, kh = jax.random.split(key, 8)
+    if het_key is None:
+        het_key = het_key_from_seed(0)
+    het = heterogeneity(het_key, n, m)
+    # kh (the old, per-slot heterogeneity key — the bug) stays in the split so
+    # the other seven streams keep their historical draws.
+    kd, kD, kf, kc, ke, kp, ka, _ = jax.random.split(key, 8)
 
-    # CU-EC capacity: baseline * (1 - traffic). Heterogeneous per-link baseline
-    # (paper Sec. IV-C derives it from node distance); we draw a static-ish
-    # multiplier from the key hash of the pair so links are persistently
-    # heterogeneous across slots.
-    link_het = 0.5 + _uniform_grid(jax.random.fold_in(kh, 0), n, m)
-    d = params.d_base * link_het * (1.0 - _traffic(kd, n, m, t))
+    # CU-EC capacity: baseline * persistent multiplier * (1 - traffic).
+    d = params.d_base * het.link_het * (1.0 - _traffic(kd, het.phase_d, t))
 
-    ec_het = 0.5 + _uniform_grid(jax.random.fold_in(kh, 1), m, m)
-    cap_d = params.cap_d_base * ec_het * (1.0 - _traffic(kD, m, m, t))
+    cap_d = params.cap_d_base * het.ec_het * (1.0 - _traffic(kD, het.phase_D, t))
     cap_d = 0.5 * (cap_d + cap_d.T)
     cap_d = cap_d * (1.0 - jnp.eye(m))
 

@@ -21,6 +21,12 @@ def exact_collection(logw: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         omega^n_ij = logw[i,j] - [n log n - (n-1) log(n-1)]
     so the total matched weight equals the P1' objective (marginal-gain
     telescoping). Returns (alpha, theta).
+
+    Edges with non-positive weight are pruned: blossom with
+    ``maxcardinality=False`` never includes them (dropping such an edge never
+    lowers the matched weight), and since the crowding penalty grows with n
+    the inner loop can stop at the first non-positive copy — without this the
+    graph is O(N^2 M) edges and exact mode crawls at simulation scale.
     """
     n_cu, n_ec = logw.shape
     g = nx.Graph()
@@ -31,6 +37,8 @@ def exact_collection(logw: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
             for n in range(1, n_cu + 1):
                 pen = n * math.log(n) - (n - 1) * (math.log(n - 1) if n > 1 else 0.0)
                 wt = float(logw[i, j]) - pen
+                if wt <= 0.0:
+                    break  # pen is increasing in n: all later copies are <= 0 too
                 g.add_edge(("cu", i), ("ec", j, n), weight=wt)
     match = nx.max_weight_matching(g, maxcardinality=False)
     alpha = np.zeros((n_cu, n_ec), np.float32)

@@ -154,6 +154,21 @@ def mask_pairs(a: jax.Array, row_mask: jax.Array, col_mask: jax.Array,
     return jnp.where((row_mask[..., :, None] * col_mask[..., None, :]) > 0, a, fill)
 
 
+# fold_in salt separating the slot-invariant heterogeneity key from every
+# other use of the run seed (arbitrary constant, spells "HET\0").
+_HET_FOLD = 0x48455400
+
+
+def het_key_from_seed(seed: int | jax.Array) -> jax.Array:
+    """The slot-invariant PRNG key driving *persistent* network heterogeneity
+    (per-link capacity multipliers + diurnal phases, ``network.heterogeneity``).
+
+    Derived once from the run seed and carried unchanged in
+    ``SchedulerState.het_key``, so the capacity skew the scheduler fights
+    persists across slots instead of being resampled i.i.d. every slot."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), _HET_FOLD)
+
+
 def stack_slice_params(params: list["SliceParams"] | tuple["SliceParams", ...]) -> "SliceParams":
     """Stack K per-slice parameter pytrees into one (K, ...) pytree."""
     return jax.tree.map(lambda *ls: jnp.stack(ls), *params)
@@ -316,6 +331,12 @@ class SchedulerState(NamedTuple):
     total_trained: jax.Array  # scalar accumulated |D(t)|
     uploaded: jax.Array  # (N,) cumulative per-CU uploads (Fig. 5 metric)
     rng: jax.Array  # PRNG key for stochastic network state
+    # Slot-invariant key for persistent network heterogeneity (het_key_from_
+    # seed): step threads it through sample_network_state UNCHANGED, so the
+    # per-link capacity multipliers and diurnal phases persist across slots
+    # while the noise terms (drawn from rng's per-slot splits) stay i.i.d.
+    # None on hand-built legacy states -> the sampler's documented default.
+    het_key: jax.Array = None
 
 
 def init_state(
@@ -342,4 +363,5 @@ def init_state(
         total_trained=jnp.asarray(0.0, jnp.float32),
         uploaded=jnp.zeros((shape.n_cu,), jnp.float32),
         rng=jax.random.PRNGKey(seed),
+        het_key=het_key_from_seed(seed),
     )

@@ -1,17 +1,25 @@
-"""Pallas TPU kernel for the scheduler's greedy CU->EC assignment.
+"""Pallas TPU kernels for the scheduler's three greedy matching hot loops.
 
-This is the paper's scalability hot spot (Sec. III-D): plain-P1 assignment
-runs EVERY slot inside L-DS (step 3) and NO-SDC, and the Hungarian solve is
-O(N^3 M^3). The greedy policy the paper prescribes is a sequential
-argmax-and-mask loop — awkward on accelerators because each of the M
-iterations is a full (N x M) reduction.
+These are the paper's scalability hot spot (Sec. III-D): the skew-aware
+collection (P1'), the plain-P1 assignment (L-DS step 3 / NO-SDC) and the
+Thm.-2 EC pairing all run EVERY slot of the production path, and each is a
+sequential argmax-and-mask scan — awkward on accelerators because every
+iteration is a full matrix reduction followed by a data-dependent scatter.
 
-TPU design: one grid step per selected pair. The weight matrix is tiled
-(block_n x M) into VMEM; row/column "taken" masks live in VMEM scratch and
-persist across grid steps. Each step does a masked argmax over the tiles
-(VPU reductions), then updates the masks — O(M * N * M / lanes) total, no
-HBM round-trips for the masks. For N beyond one VMEM tile the row dimension
-is swept block-by-block inside the step via a second grid dim.
+Shared TPU design (all three kernels): one grid step per selected pair. The
+weight matrix lives in VMEM for the whole grid; the loop-carried state —
+per-CU "assigned"/"taken" masks, per-EC connection counts, free-EC masks and
+the early-stop flag — lives in VMEM/SMEM scratch that persists across grid
+steps. Each step is a masked argmax (VPU reduction) plus O(1) scalar
+updates, so the whole matcher runs on-chip with zero HBM round-trips for
+the state. The collection kernel additionally computes the marginal
+crowding penalty (n+1)log(n+1) - n log n from the on-chip counts.
+
+All kernels are bit-exact against the jnp references in ``ref.py``
+(tests/test_matching_kernels.py runs them in interpret mode on CPU); the
+argmax order, penalty arithmetic and early-stop semantics mirror the refs
+operation for operation. VMEM limit: the full (N, M) weight tile must fit
+(N <= ~16k rows at M = 64, f32) — see README.md.
 """
 from __future__ import annotations
 
@@ -21,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .ref import _marginal_penalty
 
 _NEG = -1e30
 
@@ -65,5 +75,122 @@ def greedy_assignment_pallas(w: jax.Array, interpret: bool = False) -> jax.Array
         out_shape=jax.ShapeDtypeStruct((n_cu, n_ec), jnp.float32),
         scratch_shapes=[pltpu.VMEM((n_cu,), jnp.float32),
                         pltpu.VMEM((n_ec,), jnp.float32)],
+        interpret=interpret,
+    )(w)
+
+
+def _collection_kernel(w_ref, alpha_ref, assigned_ref, count_ref, done_ref,
+                       *, n_ec: int):
+    """Skew-aware P1' greedy: one connection per grid step.
+
+    Scratch (persists across grid steps): per-CU assigned mask (VMEM), per-EC
+    connection count (VMEM, f32 — exact for the small integer counts), and
+    the early-stop flag (SMEM). Mirrors ``ref.greedy_collection_ref`` exactly:
+    sanitize -> marginal penalty from counts -> mask assigned rows -> argmax
+    -> take iff gain > 0 and not yet stopped.
+    """
+    it = pl.program_id(0)
+
+    @pl.when(it == 0)
+    def _init():
+        assigned_ref[...] = jnp.zeros_like(assigned_ref)
+        count_ref[...] = jnp.zeros_like(count_ref)
+        done_ref[0] = 0.0
+        alpha_ref[...] = jnp.zeros_like(alpha_ref)
+
+    w = w_ref[...]  # (N, M) in VMEM
+    w = jnp.where(jnp.isfinite(w), w, _NEG)
+    # Marginal crowding penalty of the (n+1)-th CU, from the on-chip counts.
+    gain = w - _marginal_penalty(count_ref[...])[None, :]
+    gain = jnp.where(assigned_ref[...][:, None] > 0, _NEG, gain)
+    flat = jnp.argmax(gain)
+    i, j = flat // n_ec, flat % n_ec
+    best = gain.reshape(-1)[flat]
+    take = (best > 0.0) & (done_ref[0] == 0.0)
+
+    @pl.when(take)
+    def _take():
+        assigned_ref[i] = 1.0
+        count_ref[j] = count_ref[j] + 1.0
+        alpha_ref[i, j] = 1.0
+
+    @pl.when(jnp.logical_not(take))
+    def _stop():
+        done_ref[0] = 1.0
+
+
+def greedy_collection_pallas(logw: jax.Array, interpret: bool = False) -> jax.Array:
+    """Skew-aware P1' greedy collection: logw (N, M) -> alpha (N, M) in {0,1}
+    with at most one EC per CU; ECs accept multiple CUs, each new connection
+    paying the marginal crowding penalty (n+1)log(n+1) - n log n. Returns
+    alpha only; theta = alpha / count follows from the column sums (the
+    dispatch layer computes it, matching the ref bit-exactly). Requires the
+    (N, M) tile to fit VMEM."""
+    n_cu, n_ec = logw.shape
+    kernel = functools.partial(_collection_kernel, n_ec=n_ec)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_cu,),  # at most one connection per CU
+        in_specs=[pl.BlockSpec((n_cu, n_ec), lambda it: (0, 0))],
+        out_specs=pl.BlockSpec((n_cu, n_ec), lambda it: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_cu, n_ec), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_cu,), jnp.float32),
+                        pltpu.VMEM((n_ec,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(logw)
+
+
+def _pairing_kernel(w_ref, match_ref, free_ref, done_ref, *, n_ec: int):
+    """Thm.-2 EC pairing greedy: one matched pair (or solo) per grid step.
+
+    Scratch: free-EC mask (VMEM) + early-stop flag (SMEM), persisting across
+    grid steps. The diagonal of w carries the solo value, off-diagonals the
+    pair value (``ref.pairing_value_matrix``); a diagonal argmax hit matches
+    an EC with itself (solo training).
+    """
+    it = pl.program_id(0)
+
+    @pl.when(it == 0)
+    def _init():
+        free_ref[...] = jnp.ones_like(free_ref)
+        done_ref[0] = 0.0
+        match_ref[...] = jnp.zeros_like(match_ref)
+
+    w = w_ref[...]  # (M, M) in VMEM
+    avail = (free_ref[...][:, None] > 0) & (free_ref[...][None, :] > 0)
+    g = jnp.where(avail, w, _NEG)
+    flat = jnp.argmax(g)
+    j, k = flat // n_ec, flat % n_ec
+    best = g.reshape(-1)[flat]
+    take = (best > 0.0) & (done_ref[0] == 0.0)
+
+    @pl.when(take)
+    def _take():
+        free_ref[j] = 0.0
+        free_ref[k] = 0.0
+        match_ref[j, k] = 1.0
+        match_ref[k, j] = 1.0
+
+    @pl.when(jnp.logical_not(take))
+    def _stop():
+        done_ref[0] = 1.0
+
+
+def greedy_pairing_pallas(w: jax.Array, interpret: bool = False) -> jax.Array:
+    """Thm.-2 greedy EC pairing over the combined solo/pair value matrix
+    w (M, M) (diag = solo value, off-diag = pair value; build it with
+    ``ref.pairing_value_matrix``). Returns the symmetric match matrix:
+    match[j,j] = 1 -> solo, match[j,k] = 1 -> paired."""
+    n_ec = w.shape[0]
+    kernel = functools.partial(_pairing_kernel, n_ec=n_ec)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_ec,),  # each step matches >= 1 EC (or stops)
+        in_specs=[pl.BlockSpec((n_ec, n_ec), lambda it: (0, 0))],
+        out_specs=pl.BlockSpec((n_ec, n_ec), lambda it: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_ec, n_ec), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_ec,), jnp.float32),
+                        pltpu.SMEM((1,), jnp.float32)],
         interpret=interpret,
     )(w)

@@ -1,5 +1,143 @@
-"""Oracle for the greedy-assignment kernel: the (already tested) jnp
-sequential greedy from the core scheduler."""
-from repro.core.matching import greedy_assignment as greedy_assignment_ref
+"""jnp reference implementations of the three greedy matchers.
 
-__all__ = ["greedy_assignment_ref"]
+These ARE the production semantics: the Pallas kernels in ``kernel.py`` must
+reproduce them bit-for-bit (tests/test_matching_kernels.py), and on non-TPU
+backends the dispatch layer (``ops.py``) runs them directly. The paper itself
+recommends 0.5-approximation greedy matching "in practice" (Sec. III-D);
+exact oracles for the Thm.-1 / Thm.-2 graph constructions live in
+``repro.core.oracle`` (networkx blossom, host-side).
+
+Historically these lived in ``repro.core.matching``; that module is now a
+thin re-export shim so the kernel package owns the reference semantics and
+the dependency points core -> kernels (no cycle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _marginal_penalty(n: jax.Array) -> jax.Array:
+    """(n+1)log(n+1) - n log(n): marginal crowding penalty of adding the
+    (n+1)-th CU to an EC under the optimal theta = 1/n time split."""
+    n = n.astype(jnp.float32)
+    return (n + 1.0) * jnp.log(n + 1.0) - n * jnp.where(n > 0, jnp.log(jnp.maximum(n, 1.0)), 0.0)
+
+
+def greedy_collection_ref(logw: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Greedy solve of P1' (skew-aware collection).
+
+    Equivalent to greedy maximum-weight matching on the Thm.-1 bipartite graph
+    with N virtual EC copies: repeatedly connect the (CU, EC) pair with the
+    largest marginal gain  logw[i,j] - [(n_j+1)log(n_j+1) - n_j log n_j]
+    until no pair has positive gain.
+
+    Args:
+      logw: (N, M) log of collection weight w_ij = d_ij (mu_i - eta_ij - c_ij);
+            -inf (or very negative) where w_ij <= 0.
+    Returns:
+      alpha (N, M) in {0,1} and theta (N, M) with theta = 1/n_j on connections.
+    """
+    n_cu, n_ec = logw.shape
+    logw = jnp.where(jnp.isfinite(logw), logw, _NEG)
+
+    def body(_, state):
+        assigned, count, alpha, done = state
+        gain = logw - _marginal_penalty(count)[None, :]
+        gain = jnp.where(assigned[:, None], _NEG, gain)
+        flat = jnp.argmax(gain)
+        i, j = flat // n_ec, flat % n_ec
+        best = gain[i, j]
+        take = (best > 0.0) & (~done)
+        assigned = assigned.at[i].set(jnp.where(take, True, assigned[i]))
+        count = count.at[j].add(jnp.where(take, 1, 0))
+        alpha = alpha.at[i, j].set(jnp.where(take, 1.0, alpha[i, j]))
+        return assigned, count, alpha, done | (~take)
+
+    state = (
+        jnp.zeros((n_cu,), bool),
+        jnp.zeros((n_ec,), jnp.int32),
+        jnp.zeros((n_cu, n_ec), jnp.float32),
+        jnp.asarray(False),
+    )
+    assigned, count, alpha, _ = jax.lax.fori_loop(0, n_cu, body, state)
+    theta = alpha / jnp.maximum(count[None, :].astype(jnp.float32), 1.0)
+    return alpha, theta
+
+
+def greedy_assignment_ref(w: jax.Array) -> jax.Array:
+    """Plain P1 (non-skew-aware collection, used by L-DS step 3 / NO-SDC):
+    each EC gives its whole slot to one CU; select M disjoint (CU, EC) pairs
+    by descending weight (the paper's prescribed O(NM log NM) policy).
+
+    Args:
+      w: (N, M) linear weights d_ij (mu_i - eta_ij - c_ij); only w>0 usable.
+    Returns:
+      alpha (N, M) in {0,1}; theta is alpha itself (full slot).
+    """
+    n_cu, n_ec = w.shape
+    w = jnp.where(w > 0, w, _NEG)
+
+    def body(_, state):
+        cu_free, ec_free, alpha = state
+        avail = cu_free[:, None] & ec_free[None, :]
+        g = jnp.where(avail, w, _NEG)
+        flat = jnp.argmax(g)
+        i, j = flat // n_ec, flat % n_ec
+        take = g[i, j] > 0.0
+        cu_free = cu_free.at[i].set(jnp.where(take, False, cu_free[i]))
+        ec_free = ec_free.at[j].set(jnp.where(take, False, ec_free[j]))
+        alpha = alpha.at[i, j].set(jnp.where(take, 1.0, alpha[i, j]))
+        return cu_free, ec_free, alpha
+
+    state = (jnp.ones((n_cu,), bool), jnp.ones((n_ec,), bool), jnp.zeros((n_cu, n_ec), jnp.float32))
+    _, _, alpha = jax.lax.fori_loop(0, n_ec, body, state)
+    return alpha
+
+
+def pairing_value_matrix(solo: jax.Array, pair: jax.Array) -> jax.Array:
+    """The (M, M) value matrix the Thm.-2 greedy scans: off-diagonal entries
+    carry the pair value, the diagonal the solo value. Shared by the ref and
+    the Pallas dispatch path so both matchers see bit-identical inputs."""
+    n_ec = solo.shape[0]
+    return pair * (1.0 - jnp.eye(n_ec)) + jnp.diag(solo)
+
+
+def greedy_pairing_ref(solo: jax.Array, pair: jax.Array) -> jax.Array:
+    """Greedy solve of the Thm.-2 EC-pairing matching.
+
+    Nodes are ECs; a self-loop (virtual node j') carries the solo-training
+    value, an edge (j,k) the pair-training value. Greedy maximum-weight
+    matching: repeatedly take the best available entry with positive value.
+
+    Args:
+      solo: (M,) optimal solo objective per EC (problem 20).
+      pair: (M, M) optimal pair objective (problem 21), symmetric, diag unused.
+    Returns:
+      match: (M, M) float matrix; match[j,j]=1 -> solo, match[j,k]=1 -> paired.
+    """
+    n_ec = solo.shape[0]
+    w = pairing_value_matrix(solo, pair)
+
+    def body(_, state):
+        free, match, done = state
+        avail = free[:, None] & free[None, :]
+        g = jnp.where(avail, w, _NEG)
+        flat = jnp.argmax(g)
+        j, k = flat // n_ec, flat % n_ec
+        take = (g[j, k] > 0.0) & (~done)
+        free = free.at[j].set(jnp.where(take, False, free[j]))
+        free = free.at[k].set(jnp.where(take, False, free[k]))
+        match = match.at[j, k].set(jnp.where(take, 1.0, match[j, k]))
+        match = match.at[k, j].set(jnp.where(take, 1.0, match[k, j]))
+        return free, match, done | (~take)
+
+    state = (jnp.ones((n_ec,), bool), jnp.zeros((n_ec, n_ec), jnp.float32), jnp.asarray(False))
+    _, match, _ = jax.lax.fori_loop(0, n_ec, body, state)
+    return match
+
+
+__all__ = ["greedy_collection_ref", "greedy_assignment_ref",
+           "greedy_pairing_ref", "pairing_value_matrix", "_marginal_penalty"]

@@ -86,10 +86,24 @@ def test_skew_amendment_effect():
 
 
 def test_collection_evenness_vs_nosdc():
-    """Skew-aware collection spreads uploads across CUs (paper Fig. 5)."""
-    st_ds, _ = run(CFG, DS, 60)
-    st_no, _ = run(CFG, NO_SDC, 60)
-    assert metrics.stdev_collection(st_ds) < metrics.stdev_collection(st_no)
+    """Skew-aware collection spreads uploads across CUs (paper Fig. 5).
+
+    Run in the figure's capacity-limited regime — arrivals exceed upload
+    capacity, so CUs stay backlogged and cumulative uploads reflect the
+    *collection policy*. (In an arrival-limited run any queue-stabilizing
+    policy converges to uploads == arrivals, so the comparison there only
+    measures transient noise; with persistent link heterogeneity the raw
+    stdev additionally rewards whichever policy collects less overall, hence
+    the scale-free CV.)"""
+    cfg = dataclasses.replace(CFG, q0=50000.0, zeta=1500.0)
+    st_ds, _ = run(cfg, DS, 60)
+    st_no, _ = run(cfg, NO_SDC, 60)
+
+    def cv(state):
+        up = np.asarray(state.uploaded)
+        return up.std() / up.mean()
+
+    assert cv(st_ds) < cv(st_no)
 
 
 def test_backlog_eps_tradeoff():
@@ -135,3 +149,86 @@ def test_deterministic_given_seed():
     st2, _ = run(CFG, DS, 10)
     np.testing.assert_allclose(np.asarray(st1.queues.q), np.asarray(st2.queues.q))
     assert float(st1.total_cost) == float(st2.total_cost)
+
+
+class TestPersistentHeterogeneity:
+    """Regression for the het-resampling bug: ``link_het``/``ec_het`` and the
+    diurnal ``phase`` must be identical across slots t and t+1 (they derive
+    from the slot-invariant ``het_key``), while the noise terms stay i.i.d.
+    per slot. Before the fix they were drawn from the per-slot key, so the
+    capacity heterogeneity driving the paper's data-skew problem never
+    persisted."""
+
+    def _setup(self):
+        import jax
+        from repro.core.types import het_key_from_seed, split_config
+        shape, params = split_config(CFG)
+        return jax, shape, params, het_key_from_seed(CFG.seed)
+
+    def test_het_and_phase_identical_across_slots_noise_differs(self):
+        jax, shape, params, hk = self._setup()
+        import jax.numpy as jnp
+        from repro.core.network import heterogeneity, sample_network_state
+
+        # What slots t and t+1 actually use: step threads state.het_key (held
+        # constant, asserted below) into the sampler, whose heterogeneity is a
+        # pure function of it — so link_het/ec_het/phase are slot-invariant.
+        h_t = heterogeneity(hk, shape.n_cu, shape.n_ec)
+        h_t1 = heterogeneity(hk, shape.n_cu, shape.n_ec)
+        for name, a, b in zip(h_t._fields, h_t, h_t1):
+            assert (np.asarray(a) == np.asarray(b)).all(), name
+
+        # ... while everything drawn from the per-slot key still differs.
+        k_t = jax.random.fold_in(jax.random.PRNGKey(42), 0)
+        k_t1 = jax.random.fold_in(jax.random.PRNGKey(42), 1)
+        net_t = sample_network_state(k_t, shape, jnp.asarray(0), params, het_key=hk)
+        net_t1 = sample_network_state(k_t1, shape, jnp.asarray(1), params, het_key=hk)
+        assert not np.allclose(np.asarray(net_t.c), np.asarray(net_t1.c))
+        assert not np.allclose(np.asarray(net_t.d), np.asarray(net_t1.d))
+
+        # het_key is live, not decorative: a different one changes capacity.
+        from repro.core.types import het_key_from_seed
+        net_other = sample_network_state(k_t, shape, jnp.asarray(0), params,
+                                         het_key=het_key_from_seed(CFG.seed + 1))
+        assert not np.allclose(np.asarray(net_t.d), np.asarray(net_other.d))
+
+    def test_step_carries_het_key_unchanged(self):
+        state = init_state(CFG)
+        s1, _, _ = step(CFG, DS, state)
+        s2, _, _ = step(CFG, DS, s1)
+        assert state.het_key is not None
+        assert (np.asarray(state.het_key) == np.asarray(s1.het_key)).all()
+        assert (np.asarray(s1.het_key) == np.asarray(s2.het_key)).all()
+
+    def test_capacity_time_mean_tracks_link_het(self):
+        """Persistence is visible in the data: averaged over a full diurnal
+        period, per-link capacity is ordered by the persistent multiplier.
+        Under the old bug the time-mean was flat (corr ~ 0)."""
+        jax, shape, params, hk = self._setup()
+        import jax.numpy as jnp
+        from repro.core.network import heterogeneity, sample_network_state
+
+        sampler = jax.jit(lambda k, t: sample_network_state(
+            k, shape, t, params, het_key=hk).d)
+        base = jax.random.PRNGKey(7)
+        # 96 slots spaced 3 apart span the 288-slot diurnal period, so the
+        # per-link phase offsets average out of the mean.
+        ds = np.stack([np.asarray(sampler(jax.random.fold_in(base, s),
+                                          jnp.asarray(3 * s)))
+                       for s in range(96)])
+        het = np.asarray(heterogeneity(hk, shape.n_cu, shape.n_ec).link_het)
+        corr = np.corrcoef(ds.mean(axis=0).ravel(), het.ravel())[0, 1]
+        assert corr > 0.8, corr
+
+    def test_heterogeneity_padding_invariant(self):
+        """Entity-keyed het draws: padding to a larger shape leaves the real
+        block bit-identical (the ragged-fleet invariant)."""
+        _, shape, _, hk = self._setup()
+        from repro.core.network import heterogeneity
+
+        n, m = shape.n_cu, shape.n_ec
+        small = heterogeneity(hk, n, m)
+        big = heterogeneity(hk, n + 3, m + 2)
+        assert (np.asarray(big.link_het)[:n, :m] == np.asarray(small.link_het)).all()
+        assert (np.asarray(big.phase_d)[:n, :m] == np.asarray(small.phase_d)).all()
+        assert (np.asarray(big.ec_het)[:m, :m] == np.asarray(small.ec_het)).all()
